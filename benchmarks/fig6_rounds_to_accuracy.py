@@ -1,0 +1,22 @@
+"""Paper Figure 6: number of rounds to reach accuracy levels per dataset —
+the paper's headline 'factor of three or more' convergence-speed metric."""
+from __future__ import annotations
+
+from .common import dataset, emit, run_fl
+
+LEVELS = {"mnist": (0.5, 0.6, 0.7), "femnist": (0.3, 0.4, 0.5),
+          "synthetic_iid": (0.5, 0.6, 0.7), "synthetic_1_1": (0.5, 0.6, 0.7)}
+
+
+def run(rounds: int = 50) -> None:
+    for ds_name, levels in LEVELS.items():
+        ds = dataset(ds_name)
+        for label, agg, kw in (("FedAvg", "fedavg", {}),
+                               ("FOLB", "folb", dict(mu=0.1)),
+                               ("Contextual", "contextual", {})):
+            r = run_fl(label, agg, ds, rounds, **kw)
+            marks = ";".join(
+                f"acc{int(l*100)}={r.rounds_to_accuracy(l) or '>' + str(rounds)}"
+                for l in levels)
+            emit(f"fig6/{ds_name}/{label}",
+                 r.wall_time / max(rounds, 1) * 1e6, marks)

@@ -1,0 +1,19 @@
+"""Paper Figure 7: the computed aggregation variables α_k at early /
+near-converged / converged stages — variance and range per stage."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import dataset, emit, run_fl
+
+
+def run(rounds: int = 30) -> None:
+    ds = dataset("mnist")
+    r = run_fl("ctx", "contextual", ds, rounds)
+    stages = {"early": 0, "near_converged": rounds // 2,
+              "converged": rounds - 1}
+    for stage, idx in stages.items():
+        a = np.asarray(r.alpha_history[idx])
+        emit(f"fig7/alpha/{stage}", 0.0,
+             f"mean={a.mean():.4f};std={a.std():.4f};"
+             f"min={a.min():.4f};max={a.max():.4f}")

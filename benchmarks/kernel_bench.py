@@ -1,0 +1,41 @@
+"""Kernel micro-benchmarks: Pallas (interpret) correctness-path timing and
+the jnp reference timing at aggregation-realistic sizes.
+
+On this CPU container the interpret-mode numbers measure the Python kernel
+body (correctness path), NOT TPU performance — the derived column therefore
+reports bytes touched and the arithmetic-intensity analysis that feeds
+§Roofline, which is hardware-independent."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.combine import combine_pallas
+from repro.kernels.gram import gram_pallas
+
+from .common import emit, timeit
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    for K, n in ((10, 1 << 16), (16, 1 << 18), (32, 1 << 18)):
+        U = jax.random.normal(key, (K, n), jnp.float32)
+        g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+        w = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+        a = jax.random.normal(jax.random.fold_in(key, 3), (K,))
+
+        bytes_read = (K + 1) * n * 4
+        ai = (2 * K * K * n + 2 * K * n) / bytes_read   # FLOPs per byte
+        t_ref = timeit(lambda: ref.gram_ref(U, g), iters=10)
+        emit(f"kernel/gram_ref/K{K}_n{n}", t_ref,
+             f"bytes={bytes_read};flop_per_byte={ai:.2f}")
+        t_pal = timeit(lambda: gram_pallas(U, g, interpret=True), iters=3)
+        emit(f"kernel/gram_pallas_interp/K{K}_n{n}", t_pal,
+             f"single_pass=1;fused_cross_term=1")
+
+        t_ref = timeit(lambda: ref.combine_ref(w, U, a), iters=10)
+        emit(f"kernel/combine_ref/K{K}_n{n}", t_ref,
+             f"bytes={(K + 2) * n * 4}")
+        t_pal = timeit(lambda: combine_pallas(w, U, a, interpret=True), iters=3)
+        emit(f"kernel/combine_pallas_interp/K{K}_n{n}", t_pal, "hbm_passes=1")

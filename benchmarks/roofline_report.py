@@ -1,0 +1,48 @@
+"""Roofline table (deliverable g): analytic terms (calibrated — see
+tests/test_roofline_calibration.py) + compiled-artifact cross-checks from
+experiments/dryrun/*.json.
+
+Emits one row per (arch × shape × mesh) with the three terms, the dominant
+bottleneck, MODEL_FLOPS/analytic ratio, and the artifact's collective
+schedule summary."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch.analytic import analytic_roofline
+from repro.launch.shapes import INPUT_SHAPES, arch_for_shape
+
+from .common import emit
+
+
+def run(dryrun_dir: str = "experiments/dryrun") -> None:
+    art = {}
+    for fn in glob.glob(os.path.join(dryrun_dir, "*.json")):
+        with open(fn) as f:
+            rec = json.load(f)
+        art[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+
+    for arch in ASSIGNED:
+        for shape_name in INPUT_SHAPES:
+            shape = INPUT_SHAPES[shape_name]
+            cfg = arch_for_shape(get_config(arch), shape)
+            tag = f"roofline/{arch}/{shape_name}"
+            if cfg is None:
+                emit(tag, 0.0, "status=skip;reason=see DESIGN.md §5")
+                continue
+            r = analytic_roofline(cfg, shape)
+            rec = art.get((arch, shape_name, "single"))
+            extra = ""
+            if rec and rec.get("status") == "ok":
+                extra = (f";compiled=ok;coll_ops={rec['collectives']['count']};"
+                         f"artifact_mem_s={rec['roofline']['memory_s']:.2e}")
+            elif rec:
+                extra = f";compiled={rec.get('status')}"
+            emit(tag, r.compute_s * 1e6,
+                 f"compute_s={r.compute_s:.3e};memory_s={r.memory_s:.3e};"
+                 f"collective_s={r.collective_s:.3e};"
+                 f"bottleneck={r.bottleneck};useful={r.useful_ratio:.2f}"
+                 + extra)

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+  fig2_3  — contextual K₂/μ variants (paper Figs. 2-3)
+  fig4_5  — algorithm comparison: FedAvg/FedProx/FOLB vs contextual (Figs. 4-5)
+  fig6    — rounds-to-accuracy across the four datasets (Fig. 6)
+  fig7    — aggregation-variable (α) statistics per stage (Fig. 7)
+  kernels — Pallas hot-spot micro-benchmarks
+  roofline— per-(arch × shape × mesh) roofline terms from the dry-run
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks round counts.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig2_3,fig4_5,fig6,fig7,"
+                         "kernels,roofline")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (fig2_3_k2_variants, fig4_5_algorithms,
+                   fig6_rounds_to_accuracy, fig7_alpha_stages, kernel_bench,
+                   roofline_report)
+
+    print("name,us_per_call,derived")
+    if only is None or "fig2_3" in only:
+        fig2_3_k2_variants.run(rounds=10 if args.quick else 25)
+    if only is None or "fig4_5" in only:
+        fig4_5_algorithms.run(rounds=12 if args.quick else 40)
+    if only is None or "fig6" in only:
+        fig6_rounds_to_accuracy.run(rounds=15 if args.quick else 50)
+    if only is None or "fig7" in only:
+        fig7_alpha_stages.run(rounds=10 if args.quick else 30)
+    if only is None or "kernels" in only:
+        kernel_bench.run()
+    if only is None or "roofline" in only:
+        roofline_report.run()
+
+
+if __name__ == "__main__":
+    main()

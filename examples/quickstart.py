@@ -1,0 +1,57 @@
+"""Quickstart: the paper in one page.
+
+Runs 30 rounds of federated logistic regression on the heterogeneous
+Synthetic(1,1) dataset with FedAvg and with the paper's contextual
+aggregation, printing loss/accuracy per round.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.data import make_synthetic
+from repro.data.federated import FederatedDataset
+from repro.fl import ServerConfig, run_simulation
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.models.logistic import logistic_apply, logistic_loss
+
+
+def main():
+    # Synthetic(alpha=1, beta=1): strongly heterogeneous clients (paper SIV-A1)
+    xs, ys = make_synthetic(1.0, 1.0, num_devices=30, samples_per_device=60,
+                            dim=60, seed=2)
+    ds = FederatedDataset(xs, ys, np.ones(ys.shape, np.float32),
+                          xs.reshape(-1, 60)[:400], ys.reshape(-1)[:400], 10)
+    model_cfg = ArchConfig(name="logreg", family="logreg", input_dim=60,
+                           num_classes=10)
+    params = get_model(model_cfg).init(jax.random.PRNGKey(0))
+
+    results = {}
+    for agg in ("fedavg", "contextual"):
+        cfg = ServerConfig(aggregator=agg, num_devices=30,
+                           clients_per_round=10, lr=0.2, batch_size=10,
+                           min_epochs=1, max_epochs=20)  # K=10, epochs~U[1,20]
+        r = run_simulation(agg, logistic_loss, logistic_apply, params, ds,
+                           cfg, num_rounds=30, selection_seed=42)
+        results[agg] = r
+        print(f"\n=== {agg} ===")
+        for i in range(0, len(r.train_loss), 5):
+            print(f" round {i+1:3d}  loss={r.train_loss[i]:.4f} "
+                  f"acc={r.test_acc[i]:.4f}")
+
+    ra, rc = results["fedavg"], results["contextual"]
+    print("\nsummary:")
+    print(f"  fedavg      final loss={ra.train_loss[-1]:.4f} "
+          f"acc={ra.test_acc[-1]:.4f} volatility={ra.loss_volatility():.4f}")
+    print(f"  contextual  final loss={rc.train_loss[-1]:.4f} "
+          f"acc={rc.test_acc[-1]:.4f} volatility={rc.loss_volatility():.4f}")
+    print("\nTheorem 1 in action: contextual descends near-monotonically while"
+          "\nFedAvg fluctuates under heterogeneity (paper Figs. 4-5).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""SCAFFOLD vs SCAFFOLD(Contextual): the paper's plug-and-run claim in
+action on a stateful baseline it criticises (§V).
+
+Vanilla SCAFFOLD's control variates correct client drift but the uniform
+server average still oscillates under aggressive heterogeneous local
+budgets; swapping in the contextual aggregation (one-line change at the
+server) stabilises it.
+
+  PYTHONPATH=src python examples/scaffold_comparison.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.data import make_synthetic
+from repro.data.federated import FederatedDataset
+from repro.fl import ServerConfig, run_scaffold
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.models.logistic import logistic_apply, logistic_loss
+
+
+def main():
+    xs, ys = make_synthetic(1.0, 1.0, num_devices=30, samples_per_device=60,
+                            dim=60, seed=2)
+    ds = FederatedDataset(xs, ys, np.ones(ys.shape, np.float32),
+                          xs.reshape(-1, 60)[:400], ys.reshape(-1)[:400], 10)
+    cfg_m = ArchConfig(name="lr", family="logreg", input_dim=60,
+                       num_classes=10)
+    params = get_model(cfg_m).init(jax.random.PRNGKey(0))
+
+    for agg, label in (("fedavg", "SCAFFOLD"),
+                       ("contextual", "SCAFFOLD(Contextual)")):
+        cfg = ServerConfig(aggregator=agg, num_devices=30,
+                           clients_per_round=10, lr=0.2, batch_size=10,
+                           min_epochs=1, max_epochs=20)
+        r = run_scaffold(label, logistic_loss, logistic_apply, params, ds,
+                         cfg, num_rounds=25, selection_seed=42)
+        print(f"\n=== {label} ===")
+        for i in range(0, len(r.train_loss), 5):
+            print(f" round {i+1:3d}  loss={r.train_loss[i]:.4f} "
+                  f"acc={r.test_acc[i]:.4f}")
+        print(f" final loss={r.train_loss[-1]:.4f} acc={r.test_acc[-1]:.4f} "
+              f"volatility={r.loss_volatility():.4f}")
+
+
+if __name__ == "__main__":
+    main()

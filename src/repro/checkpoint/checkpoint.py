@@ -1,0 +1,76 @@
+"""Sharding-aware pytree checkpointing (npz payload + JSON treedef).
+
+Works for any pytree of arrays (params, optimizer state, FL server state).
+Arrays are gathered to host (``jax.device_get``) before writing; on restore
+the caller re-shards via ``jax.device_put(tree, shardings)``.
+
+Layout:  <dir>/<step>.ckpt.npz  +  <dir>/<step>.ckpt.json (structure + meta)
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_names(tree: Pytree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Pytree,
+                    meta: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    names, leaves, _ = _flatten_with_names(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    base = os.path.join(directory, f"{step:08d}.ckpt")
+    # numpy's savez cannot serialise ml_dtypes (bfloat16 &c.) — store those
+    # upcast to f32; restore casts back via the template dtype.
+    storable = [a.astype(np.float32) if a.dtype.name not in
+                ("float32", "float64", "int32", "int64", "uint8", "int8",
+                 "uint16", "int16", "uint32", "uint64", "bool", "float16")
+                else a for a in host]
+    np.savez(base + ".npz", **{f"leaf_{i}": a for i, a in enumerate(storable)})
+    with open(base + ".json", "w") as f:
+        json.dump({"step": step, "names": names,
+                   "dtypes": [str(a.dtype) for a in host],
+                   "shapes": [list(a.shape) for a in host],
+                   "meta": meta or {}}, f)
+    return base + ".npz"
+
+
+def load_checkpoint(directory: str, step: int, like: Pytree
+                    ) -> Tuple[Pytree, Dict[str, Any]]:
+    base = os.path.join(directory, f"{step:08d}.ckpt")
+    with open(base + ".json") as f:
+        header = json.load(f)
+    payload = np.load(base + ".npz")
+    leaves = [payload[f"leaf_{i}"] for i in range(len(header["names"]))]
+    names, tmpl_leaves, treedef = _flatten_with_names(like)
+    if names != header["names"]:
+        raise ValueError("checkpoint structure mismatch: "
+                         f"{set(names) ^ set(header['names'])}")
+    restored = [np.asarray(a, dtype=t.dtype) for a, t in zip(leaves, tmpl_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, restored), header["meta"]
+
+
+def restore_latest(directory: str, like: Pytree
+                   ) -> Optional[Tuple[int, Pytree, Dict[str, Any]]]:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(int(m.group(1)) for f in os.listdir(directory)
+                   if (m := re.match(r"^(\d+)\.ckpt\.npz$", f)))
+    if not steps:
+        return None
+    tree, meta = load_checkpoint(directory, steps[-1], like)
+    return steps[-1], tree, meta

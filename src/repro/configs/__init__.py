@@ -1,0 +1,43 @@
+"""Assigned-architecture configs (+ the paper's own models).
+
+Every entry cites its source spec.  ``get_config(name)`` returns the FULL
+production config; ``get_config(name).reduced()`` is the CPU smoke variant.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+from typing import Dict, List
+
+from ..models.config import ArchConfig
+
+_MODULES = [
+    "zamba2_1p2b", "starcoder2_15b", "deepseek_moe_16b", "rwkv6_1p6b",
+    "chameleon_34b", "qwen3_14b", "gemma_7b", "whisper_large_v3",
+    "qwen2p5_32b", "olmoe_1b_7b", "paper_logreg",
+]
+
+_ALIASES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "starcoder2-15b": "starcoder2_15b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "chameleon-34b": "chameleon_34b",
+    "qwen3-14b": "qwen3_14b",
+    "gemma-7b": "gemma_7b",
+    "whisper-large-v3": "whisper_large_v3",
+    "qwen2.5-32b": "qwen2p5_32b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "paper-logreg": "paper_logreg",
+}
+
+ASSIGNED = [a for a in _ALIASES if a != "paper-logreg"]
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = _ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    mod = import_module(f".{mod_name}", __package__)
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {name: get_config(name) for name in _ALIASES}

@@ -1,0 +1,33 @@
+"""Core contextual-aggregation library (the paper's contribution).
+
+Public API:
+  * flatten utilities  — pytree/vector conversion + last-layer scoping
+  * gram               — Gram/cross reductions (jnp, chunked, Pallas-backed)
+  * solve              — optimal α (context-dependent + expected bounds)
+  * aggregation        — strategy registry (fedavg/fedprox/folb/contextual/…)
+  * distributed        — shard_map SPMD forms (incl. hierarchical multi-pod)
+"""
+from .aggregation import (AggregatorConfig, aggregate, aggregate_contextual,
+                          aggregate_contextual_expected, aggregate_fedavg,
+                          aggregate_folb, available_aggregators)
+from .distributed import (contextual_combine_sharded,
+                          hierarchical_contextual_combine, sharded_combine,
+                          sharded_gram_cross)
+from .flatten import (scope_vector, select_scope, stacked_weighted_sum,
+                      tree_add, tree_scale, tree_size, tree_sub,
+                      tree_to_vector, tree_weighted_sum, vector_to_tree)
+from .gram import gram_and_cross, gram_and_cross_chunked, gram_residual
+from .solve import (SolveConfig, bound_value, solve_alpha, solve_alpha_simple,
+                    theorem1_reduction)
+
+__all__ = [
+    "AggregatorConfig", "aggregate", "aggregate_contextual",
+    "aggregate_contextual_expected", "aggregate_fedavg", "aggregate_folb",
+    "available_aggregators", "contextual_combine_sharded",
+    "hierarchical_contextual_combine", "sharded_combine", "sharded_gram_cross",
+    "scope_vector", "select_scope", "stacked_weighted_sum", "tree_add",
+    "tree_scale", "tree_size", "tree_sub", "tree_to_vector",
+    "tree_weighted_sum", "vector_to_tree", "gram_and_cross",
+    "gram_and_cross_chunked", "gram_residual", "SolveConfig", "bound_value",
+    "solve_alpha", "solve_alpha_simple", "theorem1_reduction",
+]

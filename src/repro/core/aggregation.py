@@ -1,0 +1,144 @@
+"""Server-side model aggregation strategies.
+
+All strategies share one signature and act on *stacked* update pytrees
+(every leaf has a leading K axis — the participating devices of the round,
+i.e. the paper's "context", Definition 1):
+
+    new_params, info = aggregate(name)(params, stacked_updates, grad_tree, cfg)
+
+Implemented:
+  * ``fedavg``               — uniform average of client models (paper eq. 2).
+  * ``weighted``             — p_k-weighted average (|D_k|/|D| weights).
+  * ``folb``                 — FOLB-style inner-product weighting [11].
+  * ``contextual``           — the paper's optimal context-dependent bound
+                               aggregation (Alg. 2, via the K×K solve).
+  * ``contextual_expected``  — §III-C expected-bound variant.
+
+``grad_tree`` is the estimate of ∇f(w^t): mean of the K₂-sample local
+gradients (or, for K₂=0, of the round's own first-step gradients). FedAvg
+ignores it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flatten import (scope_vector, select_scope, stacked_weighted_sum,
+                      tree_add, tree_to_vector)
+from .gram import gram_and_cross, gram_residual
+from .solve import SolveConfig, bound_value, solve_alpha, theorem1_reduction
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class AggregatorConfig:
+    name: str = "contextual"
+    solve: SolveConfig = field(default_factory=SolveConfig)
+    # Paper §III-B "Note on efficiency": compute α from a scoped slice of the
+    # updates/gradient ("last_layer") but apply it to the full update.
+    gram_scope: Optional[str] = None
+    # client weights p_k = |D_k|/|D| for the weighted baseline
+    client_weights: Optional[jax.Array] = None
+
+
+def _stacked_to_matrix(stacked: Pytree, scope: Optional[str]) -> jax.Array:
+    """Flatten stacked updates (leading K axis per leaf) to U (K, n_scope)."""
+    scoped = select_scope(stacked, scope)
+    leaves = [l for l in jax.tree_util.tree_leaves(scoped) if l.size > 0]
+    K = leaves[0].shape[0]
+    return jnp.concatenate(
+        [jnp.reshape(l, (K, -1)).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def _num_clients(stacked: Pytree) -> int:
+    return jax.tree_util.tree_leaves(stacked)[0].shape[0]
+
+
+def aggregate_fedavg(params: Pytree, stacked_updates: Pytree,
+                     grad_tree: Optional[Pytree], cfg: AggregatorConfig
+                     ) -> Tuple[Pytree, Dict[str, jax.Array]]:
+    K = _num_clients(stacked_updates)
+    if cfg.client_weights is not None:
+        w = cfg.client_weights / jnp.sum(cfg.client_weights)
+    else:
+        w = jnp.full((K,), 1.0 / K)
+    new = tree_add(params, stacked_weighted_sum(stacked_updates, w))
+    return new, {"alpha": w}
+
+
+def aggregate_folb(params: Pytree, stacked_updates: Pytree,
+                   grad_tree: Pytree, cfg: AggregatorConfig
+                   ) -> Tuple[Pytree, Dict[str, jax.Array]]:
+    """FOLB [11]: weight each update by the (normalised) inner product between
+    its implied local gradient and the global-gradient estimate.  Updates that
+    oppose ∇f receive negative weight (the paper's "opposite direction")."""
+    U = _stacked_to_matrix(stacked_updates, cfg.gram_scope)
+    g = scope_vector(grad_tree, cfg.gram_scope)
+    # Δ_k ≈ −lr·∇F_k ⇒ alignment score s_k = ⟨−Δ_k, g⟩ (positive when aligned)
+    s = -(U @ g)
+    denom = jnp.maximum(jnp.sum(jnp.abs(s)), 1e-12)
+    alpha = s / denom
+    new = tree_add(params, stacked_weighted_sum(stacked_updates, alpha))
+    return new, {"alpha": alpha, "alignment": s}
+
+
+def aggregate_contextual(params: Pytree, stacked_updates: Pytree,
+                         grad_tree: Pytree, cfg: AggregatorConfig
+                         ) -> Tuple[Pytree, Dict[str, jax.Array]]:
+    """Paper Algorithm 2 via the K×K normal equations (DESIGN.md §2)."""
+    U = _stacked_to_matrix(stacked_updates, cfg.gram_scope)
+    g = scope_vector(grad_tree, cfg.gram_scope)
+    G, c = gram_and_cross(U, g)
+    alpha = solve_alpha(G, c, cfg.solve)
+    new = tree_add(params, stacked_weighted_sum(stacked_updates, alpha))
+    beta = cfg.solve.beta
+    info = {
+        "alpha": alpha,
+        "bound": bound_value(G, c, alpha, beta),
+        "theorem1_reduction": theorem1_reduction(G, alpha, beta),
+        "stationarity_residual": jnp.linalg.norm(gram_residual(G, c, alpha, beta)),
+        "gram_diag": jnp.diag(G),
+    }
+    return new, info
+
+
+def aggregate_contextual_expected(params: Pytree, stacked_updates: Pytree,
+                                  grad_tree: Pytree, cfg: AggregatorConfig,
+                                  pool_size: Optional[int] = None
+                                  ) -> Tuple[Pytree, Dict[str, jax.Array]]:
+    """§III-C: optimal expected bound over random selection.  The stationarity
+    solve is the contextual one scaled by (N−1)/(K−1); ``pool_size`` is N (or
+    the sampled pool N')."""
+    K = _num_clients(stacked_updates)
+    N = pool_size if pool_size is not None else K
+    scale = (N - 1) / max(K - 1, 1)
+    solve_cfg = SolveConfig(beta=cfg.solve.beta, ridge=cfg.solve.ridge,
+                            method=cfg.solve.method, expectation_scale=scale,
+                            clip_norm=cfg.solve.clip_norm)
+    cfg2 = AggregatorConfig(name="contextual", solve=solve_cfg,
+                            gram_scope=cfg.gram_scope)
+    return aggregate_contextual(params, stacked_updates, grad_tree, cfg2)
+
+
+_REGISTRY: Dict[str, Callable] = {
+    "fedavg": aggregate_fedavg,
+    "fedprox": aggregate_fedavg,     # FedProx differs client-side only
+    "weighted": aggregate_fedavg,    # weights via cfg.client_weights
+    "folb": aggregate_folb,
+    "contextual": aggregate_contextual,
+    "contextual_expected": aggregate_contextual_expected,
+}
+
+
+def aggregate(name: str) -> Callable:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown aggregator '{name}'; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_aggregators() -> Sequence[str]:
+    return tuple(sorted(_REGISTRY))

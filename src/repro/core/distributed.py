@@ -1,0 +1,104 @@
+"""Distributed (SPMD) forms of the contextual aggregation.
+
+These helpers are written to be called INSIDE ``shard_map`` (or any context
+with named mesh axes).  The data layout follows DESIGN.md §3:
+
+  * each cohort (FL client) k lives on one slice of the ``data`` axis and
+    holds its own update vector, sharded over the ``model`` axis;
+  * the Gram matrix needs all-pairs inner products → ``all_gather`` the
+    (scoped) update slices over ``data``, contract locally, ``psum`` over
+    ``model``;
+  * the combine is an α-weighted ``psum`` over ``data`` — the same wire
+    bytes as FedAvg's all-reduce.
+
+The hierarchical variant adds a second contextual stage across the ``pod``
+axis for the multi-pod mesh (edge-site aggregation → cross-site aggregation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .solve import solve_alpha_simple
+
+
+def sharded_gram_cross(u_shard: jax.Array, g_shard: jax.Array,
+                       data_axis: str = "data", model_axis: Optional[str] = "model"
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Per-device inputs: this cohort's update slice ``u_shard (n_m,)`` and the
+    global-gradient-estimate slice ``g_shard (n_m,)`` for this model shard.
+
+    Returns the replicated ``G (K, K)`` and ``c (K,)`` (f32).
+    """
+    u32 = u_shard.astype(jnp.float32)
+    g32 = g_shard.astype(jnp.float32)
+    U_all = lax.all_gather(u32, data_axis)          # (K, n_m)
+    G = U_all @ U_all.T                             # local partial Gram
+    c = U_all @ g32
+    if model_axis is not None:
+        G = lax.psum(G, model_axis)
+        c = lax.psum(c, model_axis)
+    return G, c
+
+
+def sharded_combine(u_shard: jax.Array, alpha: jax.Array,
+                    data_axis: str = "data") -> jax.Array:
+    """α-weighted combine: Σ_k α_k u_k, returned on every device (psum)."""
+    k = lax.axis_index(data_axis)
+    return lax.psum(alpha[k].astype(u_shard.dtype) * u_shard, data_axis)
+
+
+def contextual_combine_sharded(u_shard: jax.Array, g_shard: jax.Array,
+                               beta: float, ridge: float = 1e-6,
+                               data_axis: str = "data",
+                               model_axis: Optional[str] = "model",
+                               gram_u_shard: Optional[jax.Array] = None,
+                               gram_g_shard: Optional[jax.Array] = None
+                               ) -> Tuple[jax.Array, jax.Array]:
+    """Full contextual aggregation, SPMD: gram → K×K solve (replicated) →
+    weighted combine.  If ``gram_u_shard``/``gram_g_shard`` are given, the α
+    solve uses those (e.g. the paper's last-layer slice) while the combine
+    applies α to the full ``u_shard``.
+
+    Returns ``(combined_update_shard, alpha)``.
+    """
+    gu = u_shard if gram_u_shard is None else gram_u_shard
+    gg = g_shard if gram_g_shard is None else gram_g_shard
+    G, c = sharded_gram_cross(gu, gg, data_axis, model_axis)
+    alpha = solve_alpha_simple(G, c, beta, ridge)
+    return sharded_combine(u_shard, alpha, data_axis), alpha
+
+
+def hierarchical_contextual_combine(u_shard: jax.Array, g_shard: jax.Array,
+                                    beta: float, ridge: float = 1e-6,
+                                    pod_axis: str = "pod",
+                                    data_axis: str = "data",
+                                    model_axis: Optional[str] = "model"
+                                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Two-stage aggregation for multi-pod meshes (DESIGN.md §3):
+
+      stage 1 — contextual combine within each pod over ``data`` (K cohorts);
+      stage 2 — contextual combine across pods over ``pod`` (P pod-updates),
+                using the pod-mean gradient estimate.
+
+    Returns ``(combined_update_shard, alpha_intra (K,), alpha_pods (P,))``.
+    Stage-2 Gram is P×P (P = #pods) — negligible compute, one extra
+    cross-pod collective round.
+    """
+    intra, alpha_intra = contextual_combine_sharded(
+        u_shard, g_shard, beta, ridge, data_axis, model_axis)
+    # Cross-pod: each pod now holds one aggregated update (replicated over
+    # data within the pod). Gradient estimate averaged across pods.
+    g_global = lax.pmean(g_shard.astype(jnp.float32), pod_axis)
+    G2, c2 = sharded_gram_cross(intra.astype(jnp.float32), g_global,
+                                data_axis=pod_axis, model_axis=model_axis)
+    # stage-2 gram also needs reduction over the data axis (the update slices
+    # are replicated over data, so mean keeps magnitudes consistent)
+    if model_axis is not None:
+        pass  # already psum'd over model in sharded_gram_cross
+    alpha_pods = solve_alpha_simple(G2, c2, beta, ridge)
+    combined = sharded_combine(intra, alpha_pods, pod_axis)
+    return combined, alpha_intra, alpha_pods

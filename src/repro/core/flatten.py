@@ -1,0 +1,136 @@
+"""Pytree <-> flat-vector utilities used by the aggregation math.
+
+The contextual aggregation (paper eq. 4-8) operates on flattened update
+vectors ``Δ_k = w_k^{t+1} - w^t``.  These helpers convert between model
+parameter pytrees and flat vectors, and implement the paper's "last layer"
+efficiency scoping (§III-B, Note on efficiency): only a named subset of the
+pytree participates in the Gram/solve, while the *combine* still applies the
+resulting α to the full update.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def tree_to_vector(tree: Pytree, dtype: jnp.dtype | None = jnp.float32) -> jax.Array:
+    """Flatten a pytree of arrays into a single 1-D vector."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), dtype=dtype or jnp.float32)
+    parts = [jnp.ravel(x).astype(dtype) if dtype is not None else jnp.ravel(x) for x in leaves]
+    return jnp.concatenate(parts)
+
+
+def vector_to_tree(vec: jax.Array, like: Pytree) -> Pytree:
+    """Inverse of :func:`tree_to_vector` given a structural template."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    offset = 0
+    for leaf in leaves:
+        size = leaf.size
+        out.append(jnp.reshape(vec[offset:offset + size], leaf.shape).astype(leaf.dtype))
+        offset += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_size(tree: Pytree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def select_scope(tree: Pytree, scope: str | Sequence[str] | None) -> Pytree:
+    """Return a sub-pytree whose leaf paths match ``scope``.
+
+    ``scope`` semantics:
+      * ``None`` or ``"full"``   -> the whole tree (identity).
+      * ``"last_layer"``        -> leaves whose path matches common head names
+        (``lm_head``, ``head``, ``out``, ``final``, ``unembed``, ``logits``,
+        ``w``/``b`` at top level for the logistic model); falls back to the
+        lexicographically last top-level key if nothing matches.
+      * a regex string or list of regex strings -> leaves whose '/'-joined
+        path matches any pattern.
+
+    Non-matching leaves are replaced by zero-size arrays so the result is a
+    valid pytree with stable structure (flattening simply skips them).
+    """
+    if scope is None or scope == "full":
+        return tree
+
+    if scope == "last_layer":
+        patterns = [r"(^|/)(lm_head|head|out_proj|final|unembed|logits)(/|$)"]
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        if not any(re.search(patterns[0], _path_str(path)) for path, _ in flat):
+            # Fallback: last top-level key in sorted order.
+            keys = sorted({_path_str(path).split("/")[0] for path, _ in flat})
+            patterns = [r"^" + re.escape(keys[-1]) + r"(/|$)"]
+    elif isinstance(scope, str):
+        patterns = [scope]
+    else:
+        patterns = list(scope)
+
+    def keep(path_str: str) -> bool:
+        return any(re.search(p, path_str) for p in patterns)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    new_leaves = [
+        leaf if keep(_path_str(path)) else jnp.zeros((0,), leaf.dtype)
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def scope_vector(tree: Pytree, scope: str | Sequence[str] | None,
+                 dtype: jnp.dtype | None = jnp.float32) -> jax.Array:
+    """Flatten only the scoped subset of ``tree``."""
+    return tree_to_vector(select_scope(tree, scope), dtype=dtype)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_weighted_sum(trees: Iterable[Pytree], weights: jax.Array) -> Pytree:
+    """``Σ_k weights[k] * trees[k]`` over a list of pytrees (stacks lazily)."""
+    trees = list(trees)
+    assert len(trees) > 0
+    def comb(*leaves):
+        stacked = jnp.stack(leaves)  # (K, ...)
+        w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1)).astype(stacked.dtype)
+        return jnp.sum(stacked * w, axis=0)
+    return jax.tree_util.tree_map(comb, *trees)
+
+
+def stacked_weighted_sum(stacked: Pytree, weights: jax.Array) -> Pytree:
+    """Same as :func:`tree_weighted_sum` but for pre-stacked pytrees whose
+    leaves have a leading K axis."""
+    def comb(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * w, axis=0)
+    return jax.tree_util.tree_map(comb, stacked)

@@ -1,0 +1,71 @@
+"""Gram-matrix / cross-term computation for contextual aggregation.
+
+The contextual solve needs only two reductions over the (huge) parameter
+axis (see DESIGN.md §2):
+
+    G = U Uᵀ ∈ R^{K×K}      (pairwise inner products of client updates)
+    c = U g  ∈ R^{K}        (inner products with the global-gradient estimate)
+
+``U`` stacks the K flattened updates.  Everything downstream (the α solve,
+Theorem-1 bound) is O(K²) and replicated.
+
+Two execution paths:
+  * ``gram_and_cross``            — pure jnp (reference / small models).
+  * ``gram_and_cross_chunked``    — lax.scan streaming over n-chunks, the
+    memory-bound formulation mirrored by the Pallas kernel in
+    ``repro.kernels.gram`` (which ops.py dispatches to on TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_and_cross(updates: jax.Array, grad: jax.Array,
+                   dtype: jnp.dtype = jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """Compute ``(G, c)`` from stacked updates ``U (K, n)`` and gradient ``g (n,)``."""
+    u = updates.astype(dtype)
+    g = grad.astype(dtype)
+    G = u @ u.T
+    c = u @ g
+    return G, c
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def gram_and_cross_chunked(updates: jax.Array, grad: jax.Array,
+                           chunk: int = 1 << 16) -> Tuple[jax.Array, jax.Array]:
+    """Streaming version: one pass over the parameter axis in ``chunk`` columns.
+
+    Pads n to a multiple of ``chunk`` with zeros (exact: zero columns do not
+    change inner products) and accumulates in f32.
+    """
+    K, n = updates.shape
+    pad = (-n) % chunk
+    u = jnp.pad(updates, ((0, 0), (0, pad)))
+    g = jnp.pad(grad, (0, pad))
+    steps = (n + pad) // chunk
+    u = u.reshape(K, steps, chunk).transpose(1, 0, 2)   # (steps, K, chunk)
+    g = g.reshape(steps, chunk)
+
+    def body(carry, xs):
+        G, c = carry
+        uc, gc = xs
+        uc32 = uc.astype(jnp.float32)
+        G = G + uc32 @ uc32.T
+        c = c + uc32 @ gc.astype(jnp.float32)
+        return (G, c), None
+
+    init = (jnp.zeros((K, K), jnp.float32), jnp.zeros((K,), jnp.float32))
+    (G, c), _ = jax.lax.scan(body, init, (u, g))
+    return G, c
+
+
+def gram_residual(G: jax.Array, c: jax.Array, alpha: jax.Array, beta) -> jax.Array:
+    """Paper eq. (10) residual: ``r_k = ⟨Δ_k, ∇f + β Σ α_j Δ_j⟩ = c + β G α``.
+
+    Zero at the optimum — used by tests and as a numerical health metric.
+    """
+    return c + beta * (G @ alpha)

@@ -1,0 +1,72 @@
+"""Optimal aggregation-weight solve (paper eq. 7-8, reformulated).
+
+Stationarity of the context-dependent bound g(α) gives the K×K system
+
+    β (U Uᵀ) α = −U ∇f        ⇔       β G α = −c
+
+so   α* = −(1/β) G⁺ c.   We solve with Tikhonov-damped Cholesky (G is PSD by
+construction; damping `ridge·tr(G)/K` keeps the solve well-posed when client
+updates are nearly collinear — e.g. IID data late in training) and fall back
+to an eigendecomposition pseudo-inverse when requested.
+
+The expected-bound variant (§III-C) has stationarity
+
+    (K/N) c + β K(K−1)/(N(N−1)) G α = 0
+    ⇒ α* = −(1/β) · (N−1)/(K−1) · G⁺ c
+
+i.e. the same solve scaled by (N−1)/(K−1) — implemented via ``expectation_scale``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SolveConfig:
+    beta: float = 10.0              # smoothness constant; paper sets β = 1/lr
+    ridge: float = 1e-6             # Tikhonov damping, relative to mean diag
+    method: str = "cholesky"        # "cholesky" | "pinv"
+    expectation_scale: float = 1.0  # (N-1)/(K-1) for the §III-C variant
+    clip_norm: Optional[float] = None  # optional safety clip on ‖α‖ (beyond-paper)
+
+
+def solve_alpha(G: jax.Array, c: jax.Array, cfg: SolveConfig) -> jax.Array:
+    """Return α* minimising the context-dependent bound."""
+    K = G.shape[0]
+    scale = jnp.maximum(jnp.trace(G) / K, 1e-30)
+    if cfg.method == "pinv":
+        alpha = -jnp.linalg.pinv(G, rtol=1e-6) @ c / cfg.beta
+    else:
+        A = G + (cfg.ridge * scale) * jnp.eye(K, dtype=G.dtype)
+        # PSD solve via Cholesky; jnp.linalg.solve is fine on CPU/TPU for K<=64
+        alpha = -jnp.linalg.solve(A, c) / cfg.beta
+    alpha = alpha * cfg.expectation_scale
+    if cfg.clip_norm is not None:
+        norm = jnp.linalg.norm(alpha)
+        alpha = alpha * jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norm, 1e-30))
+    return alpha
+
+
+@partial(jax.jit, static_argnames=("beta", "ridge"))
+def solve_alpha_simple(G: jax.Array, c: jax.Array, beta: float, ridge: float = 1e-6) -> jax.Array:
+    """Jit-friendly functional form used inside distributed train steps."""
+    K = G.shape[0]
+    scale = jnp.maximum(jnp.trace(G) / K, 1e-30)
+    A = G + (ridge * scale) * jnp.eye(K, dtype=G.dtype)
+    return -jnp.linalg.solve(A, c) / beta
+
+
+def bound_value(G: jax.Array, c: jax.Array, alpha: jax.Array, beta) -> jax.Array:
+    """The lower-bound function g(α) = ⟨∇f, Σα_kΔ_k⟩ + (β/2)‖Σα_kΔ_k‖²
+    expressed through (G, c):  g(α) = cᵀα + (β/2) αᵀGα.  Negative at α*."""
+    return c @ alpha + 0.5 * beta * alpha @ G @ alpha
+
+
+def theorem1_reduction(G: jax.Array, alpha: jax.Array, beta) -> jax.Array:
+    """Theorem 1 guaranteed loss reduction: (β/2)‖Σ α_k Δ_k‖² = (β/2) αᵀGα."""
+    return 0.5 * beta * alpha @ G @ alpha

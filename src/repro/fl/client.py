@@ -1,0 +1,78 @@
+"""Client-side local optimization (Algorithm 1, line 4).
+
+``client_update`` runs mini-batch SGD (optionally with the FedProx proximal
+term) for a *traced* number of steps — computational heterogeneity is
+simulated by giving each client a per-round step budget and masking steps
+beyond it, so the whole client population can be ``vmap``-ed inside one jit.
+
+Loss functions follow the convention
+    ``loss_fn(params, (x, y, sample_weight)) -> scalar``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _sample_batch(key: jax.Array, x: jax.Array, y: jax.Array,
+                  mask: jax.Array, batch_size: int):
+    """Mask-aware with-replacement mini-batch sampling (jit-friendly)."""
+    m = x.shape[0]
+    probs = mask / jnp.maximum(mask.sum(), 1.0)
+    idx = jax.random.choice(key, m, shape=(batch_size,), p=probs)
+    return x[idx], y[idx], jnp.ones((batch_size,), jnp.float32)
+
+
+def local_gradient(loss_fn: Callable, params: Pytree, x: jax.Array,
+                   y: jax.Array, mask: jax.Array) -> Pytree:
+    """Full-local-dataset gradient ∇F_k(w) — used for the ∇f(w^t) estimate."""
+    return jax.grad(loss_fn)(params, (x, y, mask))
+
+
+def client_update(loss_fn: Callable, global_params: Pytree, x: jax.Array,
+                  y: jax.Array, mask: jax.Array, num_steps: jax.Array,
+                  key: jax.Array, *, max_steps: int, batch_size: int,
+                  lr: float, mu: float = 0.0
+                  ) -> Tuple[Pytree, Pytree]:
+    """One client's local optimization.
+
+    Returns ``(delta, first_grad)``: the parameter update
+    Δ = w_k^{t+1} − w^t, and the first mini-batch gradient at w^t (the K₂=0
+    global-gradient estimate reuses these, §III-B).
+    """
+    if mu != 0.0:
+        def step_loss(p, batch):
+            base = loss_fn(p, batch)
+            sq = sum(jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2)
+                     for a, b in zip(jax.tree_util.tree_leaves(p),
+                                     jax.tree_util.tree_leaves(global_params)))
+            return base + 0.5 * mu * sq
+    else:
+        step_loss = loss_fn
+
+    grad_fn = jax.grad(step_loss)
+
+    def body(params, inp):
+        step_idx, step_key = inp
+        bx, by, bw = _sample_batch(step_key, x, y, mask, batch_size)
+        g = grad_fn(params, (bx, by, bw))
+        live = (step_idx < num_steps).astype(jnp.float32)
+        params = jax.tree_util.tree_map(
+            lambda p, gg: (p - lr * live * gg.astype(jnp.float32)).astype(p.dtype),
+            params, g)
+        return params, None
+
+    keys = jax.random.split(key, max_steps)
+    steps = jnp.arange(max_steps)
+    final, _ = jax.lax.scan(body, global_params, (steps, keys))
+
+    delta = jax.tree_util.tree_map(jnp.subtract, final, global_params)
+    # K₂=0 estimate (§III-B): full-local-dataset gradient at w^t — the same
+    # quantity a dedicated K₂ device would report.
+    first_grad = jax.grad(loss_fn)(global_params, (x, y, mask))
+    return delta, first_grad

@@ -1,0 +1,36 @@
+"""Evaluation metrics for the FL experiments (paper §IV-A4)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def evaluate_classifier(apply_fn: Callable, params: Pytree, x: jax.Array,
+                        y: jax.Array, batch: int = 4096
+                        ) -> Tuple[float, float]:
+    """Return ``(mean_nll, accuracy)`` on a held-out set."""
+    n = x.shape[0]
+    total_nll, total_correct = 0.0, 0.0
+    for start in range(0, n, batch):
+        bx, by = x[start:start + batch], y[start:start + batch]
+        logits = apply_fn(params, bx)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, by[:, None], axis=-1)[:, 0]
+        total_nll += float(jnp.sum(nll))
+        total_correct += float(jnp.sum(jnp.argmax(logits, -1) == by))
+    return total_nll / n, total_correct / n
+
+
+def global_train_loss(loss_fn: Callable, params: Pytree, x: jax.Array,
+                      y: jax.Array, mask: jax.Array) -> float:
+    """f(w) = mask-weighted mean loss over ALL devices' data (paper eq. 1)."""
+    @jax.jit
+    def per_device(cx, cy, cm):
+        return loss_fn(params, (cx, cy, cm)) * jnp.maximum(cm.sum(), 1.0), cm.sum()
+
+    losses, counts = jax.vmap(per_device)(x, y, mask)
+    return float(jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0))

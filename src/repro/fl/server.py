@@ -1,0 +1,128 @@
+"""Server-side round orchestration (Algorithm 1 + Algorithm 2).
+
+``build_round_fn`` compiles ONE jitted function executing a full FL round:
+
+  1. gather the K selected clients' shards from the stacked dataset,
+  2. ``vmap`` ``client_update`` over them (heterogeneous step budgets),
+  3. estimate ∇f(w^t) from K₂ separately-sampled devices (or K₂=0 → reuse
+     the round's own first-step gradients, §III-B),
+  4. aggregate with the configured strategy (fedavg / folb / contextual / …).
+
+Device sampling itself stays outside jit (numpy RNG, seeded identically
+across algorithms as in the paper's §IV-A3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import AggregatorConfig, SolveConfig, aggregate
+from .client import client_update, local_gradient
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class ServerConfig:
+    aggregator: str = "contextual"
+    num_devices: int = 30            # N
+    clients_per_round: int = 10      # K
+    grad_sample: int = 0             # K₂ (0 → reuse S_t, §III-B)
+    lr: float = 0.03                 # client learning rate l
+    beta: Optional[float] = None     # None → paper's β = 1/l
+    mu: float = 0.0                  # FedProx proximal coefficient
+    batch_size: int = 32
+    min_epochs: int = 1              # computational heterogeneity:
+    max_epochs: int = 20             #   epochs ~ U[min, max] per client/round
+    gram_scope: Optional[str] = None # e.g. "last_layer" (§III-B efficiency)
+    ridge: float = 1e-6
+    expected_pool: Optional[int] = None  # N' for contextual_expected
+
+    @property
+    def smoothness(self) -> float:
+        return self.beta if self.beta is not None else 1.0 / self.lr
+
+
+class RoundState(NamedTuple):
+    params: Pytree
+    round_idx: jax.Array
+
+
+def init_server(params: Pytree) -> RoundState:
+    return RoundState(params=params, round_idx=jnp.zeros((), jnp.int32))
+
+
+def build_round_fn(loss_fn: Callable, cfg: ServerConfig,
+                   samples_per_device: int) -> Callable:
+    """Return ``round_fn(state, data, sel, grad_sel, num_steps, key)``.
+
+    * ``data``       — ``(x (N,m,...), y (N,m), mask (N,m))`` stacked shards
+    * ``sel``        — (K,) int32 selected client ids S_t
+    * ``grad_sel``   — (K₂,) int32 ids for the ∇f estimate (ignored if K₂=0)
+    * ``num_steps``  — (K,) int32 per-client local step budgets
+    """
+    steps_per_epoch = max(samples_per_device // cfg.batch_size, 1)
+    max_steps = cfg.max_epochs * steps_per_epoch
+    beta = cfg.smoothness
+
+    agg_cfg = AggregatorConfig(
+        name=cfg.aggregator,
+        solve=SolveConfig(beta=beta, ridge=cfg.ridge),
+        gram_scope=cfg.gram_scope)
+    agg_fn = aggregate(cfg.aggregator)
+
+    upd = partial(client_update, loss_fn, max_steps=max_steps,
+                  batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu)
+
+    @jax.jit
+    def round_fn(state: RoundState, data, sel, grad_sel, num_steps, key
+                 ) -> Tuple[RoundState, Dict[str, jax.Array]]:
+        x, y, mask = data
+        cx, cy, cm = x[sel], y[sel], mask[sel]
+        keys = jax.random.split(key, sel.shape[0])
+        deltas, first_grads = jax.vmap(
+            lambda xx, yy, mm, ns, kk: upd(state.params, xx, yy, mm, ns, kk)
+        )(cx, cy, cm, num_steps, keys)
+
+        if cfg.grad_sample > 0:
+            gx, gy, gm = x[grad_sel], y[grad_sel], mask[grad_sel]
+            grads = jax.vmap(lambda xx, yy, mm: local_gradient(
+                loss_fn, state.params, xx, yy, mm))(gx, gy, gm)
+        else:
+            grads = first_grads
+        grad_est = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0), grads)
+
+        if cfg.aggregator == "contextual_expected":
+            new_params, info = agg_fn(state.params, deltas, grad_est, agg_cfg,
+                                      pool_size=cfg.expected_pool or cfg.num_devices)
+        else:
+            new_params, info = agg_fn(state.params, deltas, grad_est, agg_cfg)
+
+        update_norms = jax.vmap(
+            lambda i: jnp.sqrt(sum(jnp.sum(jnp.square(l[i].astype(jnp.float32)))
+                                   for l in jax.tree_util.tree_leaves(deltas)))
+        )(jnp.arange(sel.shape[0]))
+        info = dict(info)
+        info["update_norms"] = update_norms
+        return RoundState(new_params, state.round_idx + 1), info
+
+    return round_fn
+
+
+def sample_round(rng: np.random.RandomState, cfg: ServerConfig,
+                 steps_per_epoch: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side per-round randomness: S_t, the K₂ gradient sample, and the
+    per-client local step budgets (epochs ~ U[min,max] × steps/epoch)."""
+    sel = rng.choice(cfg.num_devices, size=cfg.clients_per_round, replace=False)
+    k2 = max(cfg.grad_sample, 1)
+    grad_sel = rng.choice(cfg.num_devices, size=k2,
+                          replace=cfg.grad_sample > cfg.num_devices)
+    epochs = rng.randint(cfg.min_epochs, cfg.max_epochs + 1,
+                         size=cfg.clients_per_round)
+    num_steps = (epochs * steps_per_epoch).astype(np.int32)
+    return sel.astype(np.int32), grad_sel.astype(np.int32), num_steps

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  * ``gram``        — fused U Uᵀ / U g streaming contraction (server agg.)
+  * ``combine``     — α-weighted update combine (paper eq. 4)
+  * ``decode_attn`` — flash-decode attention with LSE partials for
+                      seq-sharded KV caches
+
+Validated on CPU with ``interpret=True`` against ``ref.py`` oracles;
+``ops.py`` wrappers dispatch compiled kernels on TPU.
+"""
+from .ops import flash_decode, gram_and_cross, lse_merge, weighted_combine
+
+__all__ = ["flash_decode", "gram_and_cross", "lse_merge", "weighted_combine"]

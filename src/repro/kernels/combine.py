@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: α-weighted update combine (paper eq. 4).
+
+    w' = w + Σ_k α_k U_k
+
+One streaming pass: grid over n-chunks; each step loads a (K, block_n) tile
+of the stacked updates plus the matching (1, block_n) slice of w, forms the
+α-weighted reduction on the MXU ((1,K) @ (K,bn)) in f32, and writes the
+updated slice.  No HBM round-trip per client — FedAvg-style K-pass
+aggregation reads U K times; this reads it once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(alpha_ref, u_ref, w_ref, out_ref):
+    a = alpha_ref[...].astype(jnp.float32)        # (1, K)
+    u = u_ref[...].astype(jnp.float32)            # (K, bn)
+    w = w_ref[...].astype(jnp.float32)            # (1, bn)
+    comb = jax.lax.dot_general(
+        a, u, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    out_ref[...] = (w + comb).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def combine_pallas(params_vec: jax.Array, updates: jax.Array,
+                   alpha: jax.Array, *, block_n: int = 2048,
+                   interpret: bool = True) -> jax.Array:
+    """``params_vec (n,)``, ``updates (K, n)``, ``alpha (K,)`` → ``(n,)``."""
+    K, n = updates.shape
+    padK = (-K) % 8
+    padN = (-n) % block_n
+    u = jnp.pad(updates, ((0, padK), (0, padN)))
+    w = jnp.pad(params_vec, (0, padN)).reshape(1, n + padN)
+    a = jnp.pad(alpha, (0, padK)).reshape(1, K + padK)
+
+    grid = ((n + padN) // block_n,)
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, K + padK), lambda i: (0, 0)),
+            pl.BlockSpec((K + padK, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n + padN), params_vec.dtype),
+        interpret=interpret,
+    )(a, u, w)
+    return out[0, :n]

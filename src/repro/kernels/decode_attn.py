@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: flash-decode attention for long KV caches.
+
+One new token attends to a cache of S entries (decode_32k / long_500k serve
+steps).  The contraction is memory-bound (reads the whole cache once), so
+the kernel streams KV blocks HBM→VMEM with online-softmax accumulators in
+VMEM and emits BOTH the attention output and the log-sum-exp, enabling the
+cross-shard combine when the cache's seq axis is sharded over the mesh
+(`ops.flash_decode_sharded` merges per-shard partials with an LSE-weighted
+sum — the collective-efficient alternative to all-gathering the cache).
+
+Grid: (B, KV, S/block_s) — the seq axis is innermost so accumulators stay
+resident in VMEM scratch across that loop.  Blocks: q (1,1,G,hd),
+k/v (1, block_s, 1, hd), per-batch lengths in SMEM-like (1,1) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                   m_scr, l_scr, acc_scr, *, block_s: int, window):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+    length = len_ref[0, 0]                         # valid entries = pos+1
+
+    scale = q.shape[-1] ** -0.5
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+    kpos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = kpos < length
+    if window is not None:
+        ok = ok & (kpos > length - 1 - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(s_idx == pl.num_programs(2) - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_scr[...] + jnp.log(l)).astype(lse_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "window", "interpret"))
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                        lengths: jax.Array, *, block_s: int = 512,
+                        window: int | None = None, interpret: bool = True):
+    """q (B, KV, G, hd); k, v (B, S, KV, hd); lengths (B,) int32 (= pos+1).
+
+    Returns ``(o (B, KV, G, hd) f32, lse (B, KV, G, 1) f32)`` — partials
+    suitable for LSE-merge across seq shards.
+    """
+    B, S, KV, hd = k.shape
+    G = q.shape[2]
+    pad = (-S) % block_s
+    if pad:
+        zk = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k, v = jnp.pad(k, zk), jnp.pad(v, zk)
+    Sp = S + pad
+    lengths2d = lengths.reshape(B, 1).astype(jnp.int32)
+
+    grid = (B, KV, Sp // block_s)
+    kernel = functools.partial(_decode_kernel, block_s=block_s, window=window)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, s: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # running max m
+            pltpu.VMEM((G, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((G, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(lengths2d, q, k, v)
+    return o, lse

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused Gram matrix + cross term for contextual aggregation.
+
+Computes in ONE streaming pass over the parameter axis (HBM → VMEM):
+
+    G = U Uᵀ ∈ R^{K×K}   and   c = U g ∈ R^{K}
+
+where U (K, n) stacks the round's client updates and g (n,) is the global
+gradient estimate.  This is the paper's server-side hot spot (DESIGN.md §2):
+n is 10⁶–10¹⁰, K ≤ 64, so the computation is a memory-bound tall-skinny
+contraction — arithmetic intensity ≈ K FLOP/byte — and the win over two
+separate jnp contractions is reading U once instead of twice.
+
+Tiling: grid over n-chunks of ``block_n`` columns; each step loads a
+(K, block_n) tile of U and a (1, block_n) tile of g into VMEM and
+accumulates the (K, K) / (K, 1) results in VMEM (f32) across the whole
+grid — outputs have a constant index_map, so they stay resident.  block_n
+is a multiple of 128 (lane dim) and K is padded to a multiple of 8
+(sublane dim) by the ops.py wrapper for MXU/VPU alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(u_ref, g_ref, G_ref, c_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        G_ref[...] = jnp.zeros_like(G_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    u = u_ref[...].astype(jnp.float32)            # (K, bn)
+    g = g_ref[...].astype(jnp.float32)            # (1, bn)
+    # MXU contraction: (K, bn) @ (bn, K) accumulated in f32
+    G_ref[...] += jax.lax.dot_general(
+        u, u, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    c_ref[...] += jax.lax.dot_general(
+        u, g, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gram_pallas(updates: jax.Array, grad: jax.Array, *, block_n: int = 2048,
+                interpret: bool = True):
+    """``updates (K, n)``, ``grad (n,)`` → ``(G (K,K) f32, c (K,) f32)``.
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container has no TPU); on TPU pass ``interpret=False``.
+    """
+    K, n = updates.shape
+    padK = (-K) % 8
+    padN = (-n) % block_n
+    u = jnp.pad(updates, ((0, padK), (0, padN)))
+    g = jnp.pad(grad, (0, padN)).reshape(1, n + padN)
+    Kp = K + padK
+
+    grid = ((n + padN) // block_n,)
+    G, c = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Kp, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Kp, Kp), lambda i: (0, 0)),
+            pl.BlockSpec((Kp, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Kp, Kp), jnp.float32),
+            jax.ShapeDtypeStruct((Kp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, g)
+    return G[:K, :K], c[:K, 0]

@@ -1,0 +1,63 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled (``interpret=False``); everywhere else they
+run in interpret mode or fall back to the jnp oracle.  ``backend()`` picks
+automatically; tests exercise both paths.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .combine import combine_pallas
+from .decode_attn import flash_decode_pallas
+from .gram import gram_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gram_and_cross(updates: jax.Array, grad: jax.Array, *,
+                   use_pallas: Optional[bool] = None,
+                   block_n: int = 2048) -> Tuple[jax.Array, jax.Array]:
+    """Fused G = U Uᵀ, c = U g.  updates (K, n), grad (n,)."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas or not on_tpu():
+        # interpret=True on CPU validates the kernel path end-to-end; on TPU
+        # the same call compiles for real.
+        return gram_pallas(updates, grad, block_n=block_n,
+                           interpret=not on_tpu())
+    return ref.gram_ref(updates, grad)
+
+
+def weighted_combine(params_vec: jax.Array, updates: jax.Array,
+                     alpha: jax.Array, *, use_pallas: Optional[bool] = None,
+                     block_n: int = 2048) -> jax.Array:
+    """w + Σ α_k U_k.  params_vec (n,), updates (K, n), alpha (K,)."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas or not on_tpu():
+        return combine_pallas(params_vec, updates, alpha, block_n=block_n,
+                              interpret=not on_tpu())
+    return ref.combine_ref(params_vec, updates, alpha)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 lengths: jax.Array, *, window: Optional[int] = None,
+                 block_s: int = 512, use_pallas: Optional[bool] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token attention vs a long cache; returns (o, lse) partials."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return flash_decode_pallas(q, k, v, lengths, block_s=block_s,
+                                   window=window, interpret=not on_tpu())
+    return ref.flash_decode_ref(q, k, v, lengths, window=window)
+
+
+def lse_merge(o_parts: jax.Array, lse_parts: jax.Array):
+    """Combine per-shard (o, lse) partials — used after a sharded
+    flash_decode where each mesh slice scanned its local cache shard."""
+    return ref.lse_merge_ref(o_parts, lse_parts)

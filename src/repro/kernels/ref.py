@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gram_ref(updates: jax.Array, grad: jax.Array):
+    """(G, c) in f32 — oracle for kernels.gram."""
+    u = updates.astype(jnp.float32)
+    g = grad.astype(jnp.float32)
+    return u @ u.T, u @ g
+
+
+def combine_ref(params_vec: jax.Array, updates: jax.Array,
+                alpha: jax.Array) -> jax.Array:
+    """w + Σ α_k U_k — oracle for kernels.combine."""
+    comb = jnp.einsum("k,kn->n", alpha.astype(jnp.float32),
+                      updates.astype(jnp.float32))
+    return (params_vec.astype(jnp.float32) + comb).astype(params_vec.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, window: int | None = None):
+    """(o, lse) — oracle for kernels.decode_attn.
+
+    q (B, KV, G, hd); k, v (B, S, KV, hd); lengths (B,)."""
+    B, S, KV, hd = k.shape
+    scale = hd ** -0.5
+    q32 = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", q32, k.astype(jnp.float32))
+    kpos = jnp.arange(S)[None, None, None, :]
+    ok = kpos < lengths[:, None, None, None]
+    if window is not None:
+        ok = ok & (kpos > lengths[:, None, None, None] - 1 - window)
+    s = jnp.where(ok, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30),
+                   v.astype(jnp.float32))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return o, lse
+
+
+def lse_merge_ref(o_parts: jax.Array, lse_parts: jax.Array):
+    """Merge per-shard flash-decode partials.
+
+    o_parts (P, B, KV, G, hd), lse_parts (P, B, KV, G, 1) → (o, lse)."""
+    m = jnp.max(lse_parts, axis=0, keepdims=True)
+    w = jnp.exp(lse_parts - m)                       # (P, …, 1)
+    denom = jnp.sum(w, axis=0)
+    o = jnp.sum(o_parts * w, axis=0) / jnp.maximum(denom, 1e-30)
+    lse = m[0] + jnp.log(jnp.maximum(denom, 1e-30))
+    return o, lse

@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+DOC = """Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) combination this lowers and
+COMPILES the production step function against ShapeDtypeStruct stand-ins
+(no allocation), then records:
+
+  * memory_analysis()  — proves the sharded program fits,
+  * cost_analysis()    — per-device FLOPs / bytes for §Roofline,
+  * collective bytes   — parsed from the compiled HLO,
+  * lower/compile wall time.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe-1b-7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out experiments/dryrun
+"""
+
+from typing import Optional
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ASSIGNED, get_config
+from ..models.registry import get_model
+from . import hlo_analysis
+from .mesh import make_production_mesh
+from .shapes import INPUT_SHAPES, arch_for_shape, input_specs
+from .steps import (build_decode_step, build_prefill_step, build_train_step,
+                    cache_sds, params_sds)
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               aggregator: str = "contextual",
+               extra: Optional[dict] = None) -> dict:
+    """Lower + compile one combination; returns the result record."""
+    shape = INPUT_SHAPES[shape_name]
+    base_cfg = get_config(arch)
+    cfg = arch_for_shape(base_cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "aggregator": aggregator, "status": "skip", "skip_reason": None}
+    if cfg is None:
+        rec["skip_reason"] = ("long_500k inapplicable (see DESIGN.md §5: "
+                              "whisper decoder ctx 448)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    extra = dict(extra or {})
+    p_mode = "dp" if extra.get("dp_only") else "tp"
+    p_sds = params_sds(cfg, mesh, mode=p_mode)
+    rec["variant"] = extra or "baseline"
+
+    with mesh:
+        if shape.kind == "train":
+            step = build_train_step(cfg, mesh, shape, aggregator=aggregator,
+                                    **extra)
+            batch = input_specs(cfg, shape, mesh)
+            lowered = jax.jit(step).lower(p_sds, batch)
+        elif shape.kind == "prefill":
+            step = build_prefill_step(cfg, mesh, shape)
+            batch = input_specs(cfg, shape, mesh)
+            lowered = jax.jit(step).lower(p_sds, batch)
+        else:
+            step = build_decode_step(cfg, mesh, shape)
+            token = input_specs(cfg, shape, mesh)["token"]
+            cache = cache_sds(cfg, mesh, shape)
+            lowered = jax.jit(step).lower(p_sds, token, cache)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {k: int(getattr(mem, k)) for k in
+                   ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes")
+                   if hasattr(mem, k)}
+    except Exception:
+        mem_rec = {}
+    text = compiled.as_text()
+    coll = hlo_analysis.collective_bytes(text)
+
+    # MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode D = batch·1
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens      # forward only
+    else:
+        model_flops = 2.0 * n_active * shape.global_batch
+    chips = 512 if multi_pod else 256
+    terms = hlo_analysis.roofline(cost, coll, model_flops, num_chips=chips)
+
+    rec.update({
+        "status": "ok",
+        "window_variant": cfg.sliding_window,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost": {k: cost[k] for k in ("flops", "bytes accessed")
+                 if k in cost},
+        "memory": mem_rec,
+        "collectives": coll,
+        "roofline": terms.to_dict(),
+        "hlo_ops": text.count("\n"),
+    })
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape)")
+    ap.add_argument("--aggregator", default="contextual",
+                    choices=["contextual", "fedavg"])
+    ap.add_argument("--out", default=None, help="output dir for JSON records")
+    ap.add_argument("--dp-only", action="store_true",
+                    help="replicate params; all axes as data parallel (§Perf)")
+    ap.add_argument("--remat", default=None,
+                    choices=["full", "dots", "none"],
+                    help="activation-checkpoint policy for train steps")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    args = ap.parse_args()
+    extra = {}
+    if args.dp_only:
+        extra["dp_only"] = True
+    if args.remat:
+        extra["remat"] = False if args.remat == "none" else args.remat
+
+    archs = ASSIGNED if args.all or args.arch is None else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or args.shape is None \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}|{shape_name}|{'multi' if mp else 'single'}"
+                try:
+                    rec = dryrun_one(arch, shape_name, mp,
+                                     aggregator=args.aggregator, extra=extra)
+                except Exception as e:                       # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if mp else "single",
+                           "status": "fail", "error": str(e)[:2000],
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                status = rec["status"]
+                detail = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    detail = (f" compute={r['compute_s']:.3e}s "
+                              f"memory={r['memory_s']:.3e}s "
+                              f"coll={r['collective_s']:.3e}s "
+                              f"bottleneck={r['bottleneck']} "
+                              f"compile={rec['compile_s']}s")
+                elif status == "fail":
+                    detail = " " + rec["error"].splitlines()[0][:160]
+                print(f"[{status:4s}] {tag}{detail}", flush=True)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    fn = f"{arch}_{shape_name}_{rec['mesh']}{args.tag}.json"
+                    with open(os.path.join(args.out, fn), "w") as f:
+                        json.dump(rec, f, indent=1)
+    if failures:
+        raise SystemExit(f"{failures} combination(s) failed")
+
+
+if __name__ == "__main__":
+    main()

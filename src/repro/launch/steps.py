@@ -1,0 +1,221 @@
+"""Distributed step builders — the production train/serve programs.
+
+``build_train_step`` realises the paper's FL round as a first-class SPMD
+program (DESIGN.md §3):
+
+  * the global batch is split into C cohorts (C = |pod|·|data| mesh axes) —
+    each cohort = one FL client holding its private shard,
+  * every cohort runs ``local_steps`` of SGD from the same global params
+    (vmapped; per-cohort gradients are *not* averaged by pjit because the
+    cohort axis is explicit),
+  * the contextual aggregation computes the Gram/cross terms on the
+    paper's last-layer scope, solves the K×K system (replicated — it is
+    O(C²)) and applies the α-weighted combine — which lowers to a weighted
+    all-reduce over the cohort axis, the same wire bytes as FedAvg,
+  * ``aggregator='fedavg'`` gives the paper's baseline (uniform mean).
+
+``build_prefill_step`` / ``build_decode_step`` are the serving programs for
+the inference shapes (decode = ONE token against a seq-sharded KV cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.solve import solve_alpha_simple
+from ..models.config import ArchConfig
+from ..models.registry import ModelBundle, get_model
+from ..sharding.specs import batch_pspec, cache_pspecs, param_pspecs
+from .shapes import InputShape, input_specs
+
+Pytree = Any
+
+
+def num_cohorts(mesh: Mesh, dp_only: bool = False, batch: int = 1 << 30) -> int:
+    c = 1
+    names = ("pod", "data", "model") if dp_only else ("pod", "data")
+    for a in names:
+        c *= mesh.shape.get(a, 1)
+    if dp_only and batch % c != 0:       # model axis doesn't divide the batch
+        c //= mesh.shape.get("model", 1)
+    return c
+
+
+def cohort_axes(mesh: Mesh, dp_only: bool = False, batch: int = 1 << 30):
+    names = ("pod", "data", "model") if dp_only else ("pod", "data")
+    axes = tuple(a for a in names if a in mesh.shape)
+    if dp_only and batch % num_cohorts(mesh, True, 1 << 30) != 0:
+        axes = tuple(a for a in axes if a != "model")
+    return axes if len(axes) > 1 else axes[0]
+
+
+# --------------------------------------------------------------- parameters
+
+def params_sds(cfg: ArchConfig, mesh: Mesh, mode: str = "tp") -> Pytree:
+    """ShapeDtypeStructs (with NamedShardings) for the model parameters."""
+    bundle = get_model(cfg)
+    shapes = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    specs = param_pspecs(cfg, shapes, mesh, mode=mode)
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+# --------------------------------------------------------------- train step
+
+def _scoped_matrix(updates: Pytree, scope_paths: Tuple[str, ...],
+                   C: int) -> jax.Array:
+    """Flatten the gram-scope slice of stacked updates to (C, n_scope) f32."""
+    flat = jax.tree_util.tree_flatten_with_path(updates)[0]
+    picked = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if any(s in name for s in scope_paths):
+            picked.append(leaf.reshape(C, -1).astype(jnp.float32))
+    if not picked:   # fallback: everything (small models)
+        picked = [l.reshape(C, -1).astype(jnp.float32) for _, l in flat]
+    return jnp.concatenate(picked, axis=1)
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape, *,
+                     aggregator: str = "contextual", lr: float = 0.02,
+                     local_steps: int = 1, gram_scope: Tuple[str, ...] =
+                     ("lm_head", "final_norm"), ridge: float = 1e-6,
+                     remat="full", dp_only: bool = False,
+                     server_momentum: float = 0.0) -> Callable:
+    """Returns ``train_step(params, batch) -> (params, metrics)`` — or, when
+    ``server_momentum > 0``, ``train_step((params, velocity), batch)``.
+
+    ``dp_only=True`` treats every mesh axis as data parallelism (cohorts =
+    all devices, replicated params) — the §Perf sharding for sub-2B models.
+    ``remat``: False | "full" | "dots" (see models.transformer.remat_wrap).
+    ``server_momentum`` (beyond-paper): FedAvgM-style momentum applied to
+    the α-combined server update — v ← μv + Σα_kΔ_k; w ← w + v.
+    """
+    bundle = get_model(cfg)
+    C = num_cohorts(mesh, dp_only, shape.global_batch)
+    beta = 1.0 / lr                      # paper §III-B: β = 1/l
+    caxes = cohort_axes(mesh, dp_only, shape.global_batch)
+
+    if cfg.family == "logreg":
+        loss_fn = lambda p, b: bundle.train_loss(p, (b["x"], b["y"], None))[0]
+    else:
+        loss_fn = lambda p, b: bundle.train_loss(p, b, remat=remat)[0]
+
+    def cohort_update(params, cohort_batch):
+        """One client's local optimization; returns (Δ, loss_at_w0)."""
+        if local_steps == 1:
+            l0, g = jax.value_and_grad(loss_fn)(params, cohort_batch)
+            delta = jax.tree_util.tree_map(
+                lambda gg: (-lr * gg.astype(jnp.float32)).astype(gg.dtype), g)
+            return delta, l0
+        def body(p, _):
+            l, g = jax.value_and_grad(loss_fn)(p, cohort_batch)
+            p = jax.tree_util.tree_map(
+                lambda pp, gg: (pp.astype(jnp.float32)
+                                - lr * gg.astype(jnp.float32)).astype(pp.dtype),
+                p, g)
+            return p, l
+        pT, losses = jax.lax.scan(body, params, None, length=local_steps)
+        delta = jax.tree_util.tree_map(jnp.subtract, pT, params)
+        return delta, losses[0]
+
+    def train_step(params_or_state, batch):
+        if server_momentum > 0.0:
+            params, velocity = params_or_state
+        else:
+            params, velocity = params_or_state, None
+        # split the global batch into C explicit cohorts (clients)
+        cb = jax.tree_util.tree_map(
+            lambda x: x.reshape((C, x.shape[0] // C) + x.shape[1:]), batch)
+        cb = jax.lax.with_sharding_constraint(
+            cb, jax.tree_util.tree_map(
+                lambda x: NamedSharding(
+                    mesh, P(*((caxes,) + (None,) * (x.ndim - 1)))), cb))
+
+        deltas, losses = jax.vmap(cohort_update, in_axes=(None, 0))(params, cb)
+
+        if aggregator == "fedavg":
+            alpha = jnp.full((C,), 1.0 / C, jnp.float32)
+            info = {}
+        else:
+            # ∇f estimate, K₂=0 form: mean of local first-step directions
+            U = _scoped_matrix(deltas, gram_scope, C)          # (C, n_scope)
+            gvec = -jnp.mean(U, axis=0) / (lr * local_steps)
+            G = U @ U.T
+            c = U @ gvec
+            alpha = solve_alpha_simple(G, c, beta, ridge)
+            info = {"gram_diag_mean": jnp.mean(jnp.diag(G)),
+                    "bound": c @ alpha + 0.5 * beta * alpha @ G @ alpha}
+
+        combined = jax.tree_util.tree_map(
+            lambda u: jnp.einsum("k,k...->...", alpha,
+                                 u.astype(jnp.float32)), deltas)
+        if server_momentum > 0.0:
+            velocity = jax.tree_util.tree_map(
+                lambda v, c: server_momentum * v.astype(jnp.float32) + c,
+                velocity, combined)
+            combined = velocity
+        new_params = jax.tree_util.tree_map(
+            lambda p, c: (p.astype(jnp.float32) + c).astype(p.dtype),
+            params, combined)
+        metrics = {"loss": jnp.mean(losses), "alpha": alpha, **info}
+        if server_momentum > 0.0:
+            return (new_params, jax.tree_util.tree_map(
+                lambda v: v.astype(jnp.float32), velocity)), metrics
+        return new_params, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------- serve steps
+
+def build_prefill_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape
+                       ) -> Callable:
+    bundle = get_model(cfg)
+
+    def prefill_step(params, batch):
+        logits, cache = bundle.prefill(params, batch, shape.seq_len)
+        return logits, cache
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape
+                      ) -> Callable:
+    bundle = get_model(cfg)
+
+    def decode_step(params, token, cache):
+        return bundle.decode(params, token, cache)
+
+    return decode_step
+
+
+def cache_sds(cfg: ArchConfig, mesh: Mesh, shape: InputShape) -> Pytree:
+    """ShapeDtypeStructs (with shardings) for the decode cache."""
+    bundle = get_model(cfg)
+    B = shape.global_batch
+    if bundle.init_cache is not None:
+        cache_shape = jax.eval_shape(lambda: bundle.init_cache(B, shape.seq_len))
+    else:
+        # whisper: cache structure comes from prefill (self KV + cross KV)
+        p_sds = params_sds(cfg, mesh)
+        prompt = {
+            "frames": jax.ShapeDtypeStruct(
+                (B, cfg.max_source_positions, cfg.d_model),
+                jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((B, 8), jnp.int32),
+        }
+        cache_shape = jax.eval_shape(
+            lambda p, b: bundle.prefill(p, b, shape.seq_len)[1], p_sds, prompt)
+    specs = cache_pspecs(cfg, cache_shape, mesh, B)
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        cache_shape, specs)

@@ -1,0 +1,271 @@
+"""Attention: GQA/MQA with RoPE, qk-norm, QKV-bias, logit softcap, causal /
+sliding-window / bidirectional masking, flash-style chunked computation, and
+single-token decode against a KV cache.
+
+The chunked path (``flash_attention``) is the portable jnp mirror of the
+Pallas TPU kernel in ``repro.kernels.decode_attn`` — double ``lax.scan``
+(query blocks × KV blocks) with online-softmax accumulators, so peak memory
+is O(block_q × block_k) per head rather than O(S²).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+from .layers import apply_rope, dense_init, rms_norm, softcap
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ArchConfig, key: jax.Array, dtype) -> Dict:
+    hd = cfg.resolved_head_dim
+    keys = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(keys[0], cfg.d_model, cfg.num_heads * hd, dtype),
+        "wk": dense_init(keys[1], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(keys[2], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(keys[3], cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(cfg: ArchConfig, params: Dict, x: jax.Array,
+                 positions: Optional[jax.Array], use_rope: bool = True):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd) with rope/qk-norm applied."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if use_rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, mode: str,
+               window: Optional[int]) -> jax.Array:
+    """(Sq, Sk) additive bias: 0 where attendable, NEG_INF elsewhere.
+    Padded KV slots carry the sentinel position 2^30 and padded queries −1;
+    both must stay masked in every mode (incl. bidir)."""
+    valid_k = (k_pos >= 0) & (k_pos < 2 ** 29)
+    if mode == "bidir":
+        return jnp.where(valid_k[None, :], 0.0, NEG_INF) * jnp.ones(
+            (q_pos.shape[0], 1), jnp.float32)
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = (diff >= 0) & valid_k[None, :]
+    if mode == "window" and window is not None:
+        ok = ok & (diff < window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_positions: jax.Array, k_positions: jax.Array,
+                    mode: str = "causal", window: Optional[int] = None,
+                    logit_softcap: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 1024) -> jax.Array:
+    """Grouped-query flash attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); H = KV * G.
+    Returns (B, Sq, H, hd). Online softmax over KV blocks; both sequence
+    axes are processed in blocks via lax.scan so peak memory is
+    O(B · H · block_q · block_k).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    kpos = jnp.pad(k_positions, (0, pad_k), constant_values=2**30)
+
+    nq, nk = (Sq + pad_q) // block_q, (Sk + pad_k) // block_k
+    # (nq, B, KV, G, bq, hd)
+    qb = qp.reshape(B, nq, block_q, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    kb = kp.reshape(B, nk, block_k, KV, hd).transpose(1, 0, 3, 2, 4)
+    vb = vp.reshape(B, nk, block_k, KV, hd).transpose(1, 0, 3, 2, 4)
+    qpb = qpos.reshape(nq, block_q)
+    kpb = kpos.reshape(nk, block_k)
+
+    def q_block(carry, q_in):
+        qi, qpos_i = q_in                      # (B,KV,G,bq,hd), (bq,)
+        qi32 = qi.astype(jnp.float32) * scale
+
+        def kv_block(acc, kv_in):
+            m, l, o = acc
+            ki, vi, kpos_i = kv_in             # (B,KV,bk,hd) ×2, (bk,)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qi32, ki.astype(jnp.float32))
+            s = softcap(s, logit_softcap)
+            s = s + _mask_bias(qpos_i, kpos_i, mode, window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, o_new), None
+
+        init = (jnp.full((B, KV, G, block_q), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, block_q), jnp.float32),
+                jnp.zeros((B, KV, G, block_q, hd), jnp.float32))
+        (m, l, o), _ = lax.scan(kv_block, init, (kb, vb, kpb))
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out
+
+    _, ob = lax.scan(q_block, None, (qb, qpb))   # (nq, B, KV, G, bq, hd)
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq + pad_q, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def naive_attention(q, k, v, *, q_positions, k_positions, mode="causal",
+                    window=None, logit_softcap=None) -> jax.Array:
+    """Reference O(S²) path (smoke tests / oracles)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = softcap(s, logit_softcap)
+    s = s + _mask_bias(q_positions, k_positions, mode, window)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_forward(cfg: ArchConfig, params: Dict, x: jax.Array,
+                      positions: jax.Array, *, mode: str = "causal",
+                      window: Optional[int] = None, use_rope: bool = True,
+                      return_kv: bool = False, flash_threshold: int = 1024):
+    """Full-sequence attention (train / prefill).  Returns out (B,S,d) and
+    optionally the (k, v) tensors for KV-cache seeding."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x, positions, use_rope)
+    kwargs = dict(q_positions=positions, k_positions=positions, mode=mode,
+                  window=window, logit_softcap=cfg.attn_logit_softcap)
+    if S <= flash_threshold:
+        o = naive_attention(q, k, v, **kwargs)
+    else:
+        o = flash_attention(q, k, v, **kwargs)
+    out = o.reshape(B, S, -1) @ params["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention_forward(cfg: ArchConfig, params: Dict, x: jax.Array,
+                            enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V (whisper)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, hd)
+    if cfg.qkv_bias:
+        q = q + params["bq"].reshape(cfg.num_heads, hd)
+    Se = enc_k.shape[1]
+    o = naive_attention(q, enc_k, enc_v,
+                        q_positions=jnp.arange(S), k_positions=jnp.arange(Se),
+                        mode="bidir") if Se <= 2048 else flash_attention(
+        q, enc_k, enc_v, q_positions=jnp.arange(S),
+        k_positions=jnp.arange(Se), mode="bidir")
+    return o.reshape(B, S, -1) @ params["wo"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, S_max, KV, hd)
+    v: jax.Array
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype
+                  ) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_seq, cfg.num_kv_heads, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode(cfg: ArchConfig, params: Dict, x: jax.Array,
+                     cache: KVCache, position: jax.Array, *,
+                     window: Optional[int] = None, use_rope: bool = True
+                     ) -> Tuple[jax.Array, KVCache]:
+    """Single-token decode. x: (B, 1, d); position: scalar int (current index).
+
+    The new K/V row is written with ``dynamic_update_slice``; attention runs
+    over the whole cache with a position mask (window-limited when set).
+    The KV cache may be sharded over its seq axis — the einsum + masked
+    softmax lower to a sharded reduction (the Pallas flash-decode kernel is
+    the TPU-optimized variant of this contraction).
+
+    RING MODE (§Perf iteration 3): when the cache capacity is ≤ the sliding
+    window, the cache is treated as a ring buffer — the new row lands at
+    ``position % W`` and every resident slot is within the window by
+    construction (slot j holds the unique p ≡ j (mod W) with p ≤ position),
+    so HBM traffic per step is O(W), not O(max_seq).  Keys keep their
+    absolute-position RoPE, so scores are identical to the dense cache.
+    """
+    B = x.shape[0]
+    S = cache.k.shape[1]
+    ring = window is not None and S <= window
+    pos_arr = jnp.full((B, 1), position, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, params, x, pos_arr if use_rope else None,
+                                   use_rope)
+    write_at = (position % S) if ring else position
+    k = lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                 (0, write_at, 0, 0))
+    v = lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                 (0, write_at, 0, 0))
+
+    hd = cfg.resolved_head_dim
+    KV = cfg.num_kv_heads
+    G = cfg.num_heads // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    s = softcap(s, cfg.attn_logit_softcap)
+    kpos = jnp.arange(S)
+    if ring:
+        ok = (kpos <= position) | (position >= S)   # all slots valid once full
+    else:
+        ok = kpos <= position
+        if window is not None:
+            ok = ok & (kpos > position - window)
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    out = o.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype) @ params["wo"]
+    return out, KVCache(k, v)
+
+
+def ring_place(k_stack: jax.Array, capacity: int) -> jax.Array:
+    """Place prompt K/V rows (…, S, KV, hd) into a ring cache of ``capacity``
+    slots: the last ``capacity`` rows land at their position-mod-W slots."""
+    S = k_stack.shape[-3]
+    if S <= capacity:
+        pad = [(0, 0)] * k_stack.ndim
+        pad[-3] = (0, capacity - S)
+        return jnp.pad(k_stack, pad)
+    rows = k_stack[..., S - capacity:, :, :]
+    slots = jnp.arange(S - capacity, S) % capacity
+    out = jnp.zeros(k_stack.shape[:-3] + (capacity,) + k_stack.shape[-2:],
+                    k_stack.dtype)
+    return out.at[..., slots, :, :].set(rows)

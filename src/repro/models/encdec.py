@@ -1,0 +1,186 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The mel-spectrogram + conv feature extractor is a STUB per the brief:
+``input_specs`` supplies precomputed frame embeddings (B, T_enc, d_model)
+(what the conv frontend would emit at 50 Hz).  This module implements the
+transformer backbone: bidirectional encoder + causal decoder with
+cross-attention, sinusoidal positions (no RoPE).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .attention import (KVCache, attention_decode, attention_forward,
+                        cross_attention_forward, init_attention,
+                        init_kv_cache)
+from .config import ArchConfig
+from .layers import dtype_of, embed_init, rms_norm, sinusoidal_positions
+from .mlp import init_mlp, mlp_forward
+
+Pytree = Any
+
+
+def init_whisper(cfg: ArchConfig, key: jax.Array) -> Pytree:
+    dtype = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 6)
+
+    def enc_block(k):
+        ks = jax.random.split(k, 2)
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "attn": init_attention(cfg, ks[0], dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "mlp": init_mlp(cfg, ks[1], dtype)}
+
+    def dec_block(k):
+        ks = jax.random.split(k, 3)
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "attn": init_attention(cfg, ks[0], dtype),
+                "ln_x": jnp.zeros((cfg.d_model,), dtype),
+                "cross": init_attention(cfg, ks[1], dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "mlp": init_mlp(cfg, ks[2], dtype)}
+
+    return {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_blocks": jax.vmap(enc_block)(jax.random.split(keys[1], cfg.encoder_layers)),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "dec_blocks": jax.vmap(dec_block)(jax.random.split(keys[2], cfg.num_layers)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": embed_init(keys[3], cfg.vocab_size, cfg.d_model, dtype).T,
+    }
+
+
+def encode(cfg: ArchConfig, params: Pytree, frames: jax.Array,
+           remat=False) -> jax.Array:
+    """frames: (B, T_enc, d_model) stub conv-frontend embeddings."""
+    B, T, _ = frames.shape
+    pos = sinusoidal_positions(T, cfg.d_model).astype(frames.dtype)
+    x = frames + pos
+    positions = jnp.arange(T)
+
+    def body(h, p):
+        a = rms_norm(h, p["ln1"], cfg.norm_eps)
+        h = h + attention_forward(cfg, p["attn"], a, positions, mode="bidir",
+                                  use_rope=False)
+        m = rms_norm(h, p["ln2"], cfg.norm_eps)
+        return h + mlp_forward(cfg, p["mlp"], m), None
+
+    from .transformer import remat_wrap
+    body = remat_wrap(body, remat)
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(cfg: ArchConfig, p: Dict, enc_out: jax.Array):
+    B, T, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(B, T, cfg.num_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(B, T, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def _decoder(cfg: ArchConfig, params: Pytree, tokens: jax.Array,
+             enc_out: jax.Array, remat=False) -> jax.Array:
+    B, S = tokens.shape
+    pos = sinusoidal_positions(S, cfg.d_model).astype(params["embed"].dtype)
+    x = params["embed"][tokens] + pos
+    positions = jnp.arange(S)
+
+    def body(h, p):
+        a = rms_norm(h, p["ln1"], cfg.norm_eps)
+        h = h + attention_forward(cfg, p["attn"], a, positions, mode="causal",
+                                  use_rope=False)
+        c = rms_norm(h, p["ln_x"], cfg.norm_eps)
+        ek, ev = _cross_kv(cfg, p["cross"], enc_out)
+        h = h + cross_attention_forward(cfg, p["cross"], c, ek, ev)
+        m = rms_norm(h, p["ln2"], cfg.norm_eps)
+        return h + mlp_forward(cfg, p["mlp"], m), None
+
+    from .transformer import remat_wrap
+    body = remat_wrap(body, remat)
+    x, _ = lax.scan(body, x, params["dec_blocks"])
+    return x
+
+
+def whisper_forward_train(cfg: ArchConfig, params: Pytree, frames: jax.Array,
+                          tokens: jax.Array, remat=False
+                          ) -> Tuple[jax.Array, jax.Array]:
+    enc_out = encode(cfg, params, frames, remat)
+    x = _decoder(cfg, params, tokens, enc_out, remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["lm_head"], jnp.zeros((), jnp.float32)
+
+
+class WhisperCache(NamedTuple):
+    self_kv: KVCache       # (L, B, S_max, KV, hd)
+    cross_k: jax.Array     # (L, B, T_enc, KV, hd)
+    cross_v: jax.Array
+    position: jax.Array
+
+
+def whisper_prefill(cfg: ArchConfig, params: Pytree, frames: jax.Array,
+                    tokens: jax.Array, max_seq: int
+                    ) -> Tuple[jax.Array, WhisperCache]:
+    """Encode audio + run the decoder prompt, building both caches."""
+    dtype = dtype_of(cfg.dtype)
+    enc_out = encode(cfg, params, frames)
+    B, S = tokens.shape
+    pos = sinusoidal_positions(S, cfg.d_model).astype(params["embed"].dtype)
+    x = params["embed"][tokens] + pos
+    positions = jnp.arange(S)
+
+    def body(h, p):
+        a = rms_norm(h, p["ln1"], cfg.norm_eps)
+        attn, (k, v) = attention_forward(cfg, p["attn"], a, positions,
+                                         mode="causal", use_rope=False,
+                                         return_kv=True)
+        h = h + attn
+        c = rms_norm(h, p["ln_x"], cfg.norm_eps)
+        ek, ev = _cross_kv(cfg, p["cross"], enc_out)
+        h = h + cross_attention_forward(cfg, p["cross"], c, ek, ev)
+        m = rms_norm(h, p["ln2"], cfg.norm_eps)
+        h = h + mlp_forward(cfg, p["mlp"], m)
+        return h, (k, v, ek, ev)
+
+    x, (ks, vs, eks, evs) = lax.scan(body, x, params["dec_blocks"])
+    pad = max_seq - S
+    kc = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+    vc = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+    x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, WhisperCache(KVCache(kc, vc), eks, evs,
+                                jnp.asarray(S, jnp.int32))
+
+
+def whisper_decode_step(cfg: ArchConfig, params: Pytree, token: jax.Array,
+                        cache: WhisperCache
+                        ) -> Tuple[jax.Array, WhisperCache]:
+    B = token.shape[0]
+    posv = sinusoidal_positions(cache.self_kv.k.shape[2], cfg.d_model)
+    x = params["embed"][token][:, None, :] + \
+        lax.dynamic_slice_in_dim(posv, cache.position, 1, axis=0
+                                 ).astype(params["embed"].dtype)
+    pos = cache.position
+
+    def body(h, inp):
+        p, ck, cv, ek, ev = inp
+        a = rms_norm(h, p["ln1"], cfg.norm_eps)
+        attn, new_kv = attention_decode(cfg, p["attn"], a, KVCache(ck, cv),
+                                        pos, use_rope=False)
+        h = h + attn
+        c = rms_norm(h, p["ln_x"], cfg.norm_eps)
+        h = h + cross_attention_forward(cfg, p["cross"], c, ek, ev)
+        m = rms_norm(h, p["ln2"], cfg.norm_eps)
+        return h + mlp_forward(cfg, p["mlp"], m), new_kv
+
+    x, new_kv = lax.scan(body, x, (params["dec_blocks"], cache.self_kv.k,
+                                   cache.self_kv.v, cache.cross_k,
+                                   cache.cross_v))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, cache._replace(self_kv=KVCache(new_kv.k, new_kv.v),
+                                  position=pos + 1)

@@ -1,0 +1,55 @@
+"""Multinomial logistic regression — the paper's own experimental model."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import cross_entropy_loss
+
+Pytree = Any
+
+
+def init_logistic(cfg: ArchConfig, key: jax.Array) -> Pytree:
+    return {
+        "w": (jax.random.normal(key, (cfg.input_dim, cfg.num_classes)) * 0.01
+              ).astype(jnp.float32),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+
+
+def logistic_apply(params: Pytree, x: jax.Array) -> jax.Array:
+    return x @ params["w"] + params["b"]
+
+
+def logistic_loss(params: Pytree, batch) -> jax.Array:
+    """batch = (x, y, sample_weights)."""
+    x, y, w = batch
+    return cross_entropy_loss(logistic_apply(params, x), y, w)
+
+
+def make_mlp_classifier(cfg: ArchConfig, hidden: int = 128):
+    """2-layer MLP classifier (a DNN variant for the last-layer-scope
+    experiments — the paper's §III-B efficiency note targets DNNs)."""
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "hidden": {"w": (jax.random.normal(k1, (cfg.input_dim, hidden))
+                             * cfg.input_dim ** -0.5).astype(jnp.float32),
+                       "b": jnp.zeros((hidden,), jnp.float32)},
+            "head": {"w": (jax.random.normal(k2, (hidden, cfg.num_classes))
+                           * hidden ** -0.5).astype(jnp.float32),
+                     "b": jnp.zeros((cfg.num_classes,), jnp.float32)},
+        }
+
+    def apply(params, x):
+        h = jax.nn.relu(x @ params["hidden"]["w"] + params["hidden"]["b"])
+        return h @ params["head"]["w"] + params["head"]["b"]
+
+    def loss(params, batch):
+        x, y, w = batch
+        return cross_entropy_loss(apply(params, x), y, w)
+
+    return init, apply, loss

@@ -1,0 +1,30 @@
+"""Gated MLP (SwiGLU / GeGLU) and plain GELU feed-forward."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import activation_fn, dense_init
+
+
+def init_mlp(cfg: ArchConfig, key: jax.Array, dtype, d_ff: int = 0) -> Dict:
+    d_ff = d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    p = {"w_up": dense_init(keys[0], cfg.d_model, d_ff, dtype),
+         "w_down": dense_init(keys[1], d_ff, cfg.d_model, dtype)}
+    if cfg.activation in ("silu", "geglu"):
+        p["w_gate"] = dense_init(keys[2], cfg.d_model, d_ff, dtype)
+    return p
+
+
+def mlp_forward(cfg: ArchConfig, params: Dict, x: jax.Array) -> jax.Array:
+    act = activation_fn(cfg.activation)
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        up = act(x @ params["w_gate"]) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"]

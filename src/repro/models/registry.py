@@ -1,0 +1,139 @@
+"""Model registry — one uniform bundle per architecture family.
+
+``ModelBundle`` is the public contract consumed by the launcher, dry-run,
+benchmarks and examples:
+
+    bundle.init(key)                          -> params
+    bundle.train_loss(params, batch)          -> (scalar_loss, aux)
+    bundle.forward(params, batch)             -> logits
+    bundle.prefill(params, batch, max_seq)    -> (last_logits, cache)
+    bundle.decode(params, token, cache)       -> (logits, cache)
+    bundle.init_cache(batch_size, max_seq)    -> cache
+    bundle.batch_spec(batch, seq)             -> {name: (shape, dtype)}
+
+Batch layouts per family:
+    dense/moe/ssm/hybrid: {"tokens": (B, S) int32}
+    vlm:                  {"tokens": (B, S−n_img) int32,
+                           "image_embeds": (B, n_img, d_model)}
+    audio (whisper):      {"frames": (B, T_enc, d_model),
+                           "tokens": (B, S) int32}
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .encdec import (init_whisper, whisper_decode_step, whisper_forward_train,
+                     whisper_prefill)
+from .layers import cross_entropy_loss
+from .logistic import init_logistic, logistic_apply, logistic_loss
+from .transformer import (decode_step, forward_train, init_lm, init_lm_cache,
+                          prefill)
+from .vlm import init_vlm, vlm_forward_train, vlm_prefill
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    config: ArchConfig
+    init: Callable
+    train_loss: Callable
+    forward: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    batch_spec: Callable
+
+
+def _lm_next_token_loss(cfg: ArchConfig, params: Pytree, batch: Dict,
+                        window: Optional[int] = None, remat: bool = False):
+    logits, aux = forward_train(cfg, params, batch["tokens"], window=window,
+                                remat=remat)
+    ce = cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+    return ce + cfg.router_aux_coef * aux, aux
+
+
+def _vlm_loss(cfg: ArchConfig, params: Pytree, batch: Dict,
+              window: Optional[int] = None, remat: bool = False):
+    logits, aux = vlm_forward_train(cfg, params, batch["tokens"],
+                                    batch["image_embeds"], window=window,
+                                    remat=remat)
+    n_img = batch["image_embeds"].shape[1]
+    text_logits = logits[:, n_img:-1]          # predict text tokens only
+    ce = cross_entropy_loss(text_logits, batch["tokens"][:, 1:])
+    return ce + cfg.router_aux_coef * aux, aux
+
+
+def _whisper_loss(cfg: ArchConfig, params: Pytree, batch: Dict,
+                  window: Optional[int] = None, remat: bool = False):
+    logits, aux = whisper_forward_train(cfg, params, batch["frames"],
+                                        batch["tokens"], remat=remat)
+    ce = cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+    return ce, aux
+
+
+def get_model(cfg: ArchConfig) -> ModelBundle:
+    if cfg.family == "logreg":
+        return ModelBundle(
+            config=cfg,
+            init=partial(init_logistic, cfg),
+            train_loss=lambda p, b: (logistic_loss(p, b), jnp.zeros(())),
+            forward=lambda p, b: logistic_apply(p, b["x"]),
+            prefill=None, decode=None, init_cache=None,
+            batch_spec=lambda batch, seq: {
+                "x": ((batch, cfg.input_dim), jnp.float32),
+                "y": ((batch,), jnp.int32)})
+
+    if cfg.family == "audio":
+        def batch_spec(batch, seq):
+            return {"frames": ((batch, cfg.max_source_positions, cfg.d_model),
+                               jnp.bfloat16 if cfg.dtype == "bfloat16"
+                               else jnp.float32),
+                    "tokens": ((batch, seq), jnp.int32)}
+        return ModelBundle(
+            config=cfg,
+            init=partial(init_whisper, cfg),
+            train_loss=partial(_whisper_loss, cfg),
+            forward=lambda p, b: whisper_forward_train(cfg, p, b["frames"],
+                                                       b["tokens"])[0],
+            prefill=lambda p, b, max_seq: whisper_prefill(
+                cfg, p, b["frames"], b["tokens"], max_seq),
+            decode=lambda p, tok, cache: whisper_decode_step(cfg, p, tok, cache),
+            init_cache=None,   # built by prefill
+            batch_spec=batch_spec)
+
+    if cfg.family == "vlm":
+        def batch_spec(batch, seq):
+            n_img = cfg.num_image_tokens
+            return {"tokens": ((batch, seq - n_img), jnp.int32),
+                    "image_embeds": ((batch, n_img, cfg.d_model),
+                                     jnp.bfloat16 if cfg.dtype == "bfloat16"
+                                     else jnp.float32)}
+        return ModelBundle(
+            config=cfg,
+            init=partial(init_vlm, cfg),
+            train_loss=partial(_vlm_loss, cfg),
+            forward=lambda p, b: vlm_forward_train(cfg, p, b["tokens"],
+                                                   b["image_embeds"])[0],
+            prefill=lambda p, b, max_seq: vlm_prefill(
+                cfg, p, b["tokens"], b["image_embeds"], max_seq),
+            decode=lambda p, tok, cache: decode_step(cfg, p, tok, cache),
+            init_cache=lambda batch, max_seq: init_lm_cache(cfg, batch, max_seq),
+            batch_spec=batch_spec)
+
+    # dense / moe / ssm / hybrid decoder-only LMs
+    return ModelBundle(
+        config=cfg,
+        init=partial(init_lm, cfg),
+        train_loss=partial(_lm_next_token_loss, cfg),
+        forward=lambda p, b: forward_train(cfg, p, b["tokens"])[0],
+        prefill=lambda p, b, max_seq: prefill(cfg, p, b["tokens"], max_seq),
+        decode=lambda p, tok, cache: decode_step(cfg, p, tok, cache),
+        init_cache=lambda batch, max_seq: init_lm_cache(cfg, batch, max_seq),
+        batch_spec=lambda batch, seq: {"tokens": ((batch, seq), jnp.int32)})

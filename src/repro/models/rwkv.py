@@ -1,0 +1,194 @@
+"""RWKV6 ("Finch") block — linear attention with data-dependent per-channel
+decay, plus the channel-mix FFN.
+
+Time-mix recurrence per head (key/value dim P, state S ∈ R^{P×P}):
+
+    S_t = diag(w_t) · S_{t-1} + k_t ⊗ v_t
+    y_t = r_t · (diag(u) · (k_t ⊗ v_t) + S_{t-1})
+
+with w_t ∈ (0,1)^P produced by the token-shifted LoRA decay path (the
+"data-dependent decay" that distinguishes RWKV6 from RWKV4/5).
+
+Training uses a chunk-parallel evaluation: within a chunk the pairwise
+decay products are materialised per channel on (Q, Q, P) tiles (Q small),
+across chunks a ``lax.scan`` carries the state.  Decode is the O(1)
+recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+from .layers import dense_init, layer_norm, rms_norm
+
+
+class RWKVState(NamedTuple):
+    shift: jax.Array   # (B, d) previous token's features (token shift)
+    wkv: jax.Array     # (B, H, P, P) linear-attention state
+    shift_ffn: jax.Array  # (B, d) token shift for channel-mix
+
+
+def init_rwkv6(cfg: ArchConfig, key: jax.Array, dtype) -> Dict:
+    d, P = cfg.d_model, cfg.rwkv_head_dim
+    H = cfg.rwkv_num_heads
+    lora = max(d // 16, 32)
+    keys = jax.random.split(key, 12)
+    return {
+        # token-shift interpolation coefficients for r,k,v,g,w
+        "mu": (jax.random.uniform(keys[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "wr": dense_init(keys[1], d, d, dtype),
+        "wk": dense_init(keys[2], d, d, dtype),
+        "wv": dense_init(keys[3], d, d, dtype),
+        "wg": dense_init(keys[4], d, d, dtype),
+        "wo": dense_init(keys[5], d, d, dtype),
+        # data-dependent decay LoRA: w = exp(−exp(w0 + tanh(x·A)·B))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_A": dense_init(keys[6], d, lora, dtype),
+        "w_B": dense_init(keys[7], lora, d, dtype, scale=0.01),
+        "u": (jax.random.normal(keys[8], (H, P)) * 0.1).astype(jnp.float32),
+        "ln_x_w": jnp.ones((d,), dtype),
+        "ln_x_b": jnp.zeros((d,), dtype),
+        # channel-mix
+        "mu_ffn": (jax.random.uniform(keys[9], (2, d)) * 0.5 + 0.25).astype(dtype),
+        "ffn_k": dense_init(keys[10], d, cfg.d_ff, dtype),
+        "ffn_v": dense_init(keys[11], cfg.d_ff, d, dtype),
+        "ffn_r": dense_init(jax.random.fold_in(keys[10], 1), d, d, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x (B,S,d) -> x shifted right by one, first slot = prev (B,d)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk: int, init_state):
+    """r,k,v,logw: (B,S,H,P) (logw ≤ 0); u: (H,P).
+    Returns (y (B,S,H,P), final_state (B,H,P,P))."""
+    B, S, H, P = r.shape
+    pad = (-S) % chunk
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        logw = jnp.pad(logw, z)  # log 1 = 0 → identity decay on padding
+    Sp = S + pad
+    nc = Sp // chunk
+    resh = lambda t: t.reshape(B, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, lw = map(resh, (r, k, v, logw))
+    cum = jnp.cumsum(lw, axis=2)          # (nc,B,Q,H,P) inclusive
+
+    def chunk_step(state, inp):
+        rq, kq, vq, cumq, lwq = inp       # (B,Q,H,P) …
+        rq32, kq32, vq32 = (t.astype(jnp.float32) for t in (rq, kq, vq))
+        # y_q reads S_{q−1}: pair (q,s) with s<q is decayed by w_{s+1}..w_{q−1}
+        # = exp(cum_{q−1} − cum_s) = exp((cum_q − logw_q) − cum_s)
+        cum_pre = cumq - lwq
+        # valid (s < q) exponents ≤ 0; clamp kills masked-pair overflow
+        dec = jnp.exp(jnp.minimum(
+            cum_pre[:, :, None] - cumq[:, None, :, :, :], 0.0))  # (B,q,s,H,P)
+        att = jnp.einsum("bqhi,bshi,bqshi->bhqs", rq32, kq32, dec)
+        # strict causal (s<q) plus the diagonal "bonus" term diag(u)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        diag = jnp.einsum("bqhi,bqhi,hi->bhq", rq32, kq32,
+                          u.astype(jnp.float32))
+        y_intra = jnp.einsum("bhqs,bshj->bqhj", att, vq32)
+        y_intra = y_intra + diag[..., None].transpose(0, 2, 1, 3) * vq32
+        # inter-chunk: y += (r_q · exp(cum_{q−1})) @ state  (state BEFORE tok q)
+        # cum is inclusive; decay from chunk start to before q = cum_{q} − lw_q
+        pre = jnp.exp(cumq - lwq)
+        y_inter = jnp.einsum("bqhi,bhij->bqhj", rq32 * pre, state)
+        # state' = diag(exp(cum_Q)) state + Σ_s exp(cum_Q − cum_s) k_s ⊗ v_s
+        total = cumq[:, -1]               # (B,H,P)
+        wk = kq32 * jnp.exp(total[:, None] - cumq)
+        state_new = state * jnp.exp(total)[..., None] + jnp.einsum(
+            "bqhi,bqhj->bhij", wk, vq32)
+        return state_new, y_intra + y_inter
+
+    final, yc = lax.scan(chunk_step, init_state.astype(jnp.float32),
+                         (rc, kc, vc, cum, lw))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, P)[:, :S]
+    return y, final
+
+
+def rwkv6_forward(cfg: ArchConfig, params: Dict, x: jax.Array,
+                  init_state: RWKVState | None = None
+                  ) -> Tuple[jax.Array, RWKVState]:
+    """Time-mix + channel-mix for a full sequence. x: (B,S,d)."""
+    B, S, d = x.shape
+    H, P = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    prev = (init_state.shift if init_state is not None
+            else jnp.zeros((B, d), x.dtype))
+    state0 = (init_state.wkv if init_state is not None
+              else jnp.zeros((B, H, P, P), jnp.float32))
+    xs = _token_shift(x, prev)
+    mix = lambda i: x + (xs - x) * params["mu"][i]
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+    r = (xr @ params["wr"]).reshape(B, S, H, P)
+    k = (xk @ params["wk"]).reshape(B, S, H, P)
+    v = (xv @ params["wv"]).reshape(B, S, H, P)
+    g = jax.nn.silu(xg @ params["wg"])
+    logw = -jnp.exp(params["w0"] +
+                    (jnp.tanh(xw @ params["w_A"]) @ params["w_B"])
+                    .astype(jnp.float32))           # (B,S,d), ≤ 0
+    logw = logw.reshape(B, S, H, P)
+
+    y, wkv = _wkv_chunked(r, k, v, logw, params["u"],
+                          max(cfg.ssm_chunk // 4, 16), state0)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = layer_norm(y, params["ln_x_w"], params["ln_x_b"], cfg.norm_eps) * g
+    out = y @ params["wo"]
+
+    # channel-mix (the RWKV FFN) with its own token shift
+    prev_f = (init_state.shift_ffn if init_state is not None
+              else jnp.zeros((B, d), x.dtype))
+    xs_f = _token_shift(x, prev_f)
+    xk_f = x + (xs_f - x) * params["mu_ffn"][0]
+    xr_f = x + (xs_f - x) * params["mu_ffn"][1]
+    kf = jnp.square(jax.nn.relu(xk_f @ params["ffn_k"]))
+    ffn = jax.nn.sigmoid(xr_f @ params["ffn_r"]) * (kf @ params["ffn_v"])
+
+    new_state = RWKVState(x[:, -1, :], wkv, x[:, -1, :])
+    return out + ffn, new_state
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int, dtype) -> RWKVState:
+    H, P = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    return RWKVState(jnp.zeros((batch, cfg.d_model), dtype),
+                     jnp.zeros((batch, H, P, P), jnp.float32),
+                     jnp.zeros((batch, cfg.d_model), dtype))
+
+
+def rwkv6_decode(cfg: ArchConfig, params: Dict, x: jax.Array,
+                 state: RWKVState) -> Tuple[jax.Array, RWKVState]:
+    """Single-token step. x: (B, 1, d)."""
+    B, _, d = x.shape
+    H, P = cfg.rwkv_num_heads, cfg.rwkv_head_dim
+    xt = x[:, 0]
+    mix = lambda i: xt + (state.shift - xt) * params["mu"][i]
+    r = (mix(0) @ params["wr"]).reshape(B, H, P).astype(jnp.float32)
+    k = (mix(1) @ params["wk"]).reshape(B, H, P).astype(jnp.float32)
+    v = (mix(2) @ params["wv"]).reshape(B, H, P).astype(jnp.float32)
+    g = jax.nn.silu(mix(3) @ params["wg"])
+    logw = -jnp.exp(params["w0"] +
+                    (jnp.tanh(mix(4) @ params["w_A"]) @ params["w_B"])
+                    .astype(jnp.float32)).reshape(B, H, P)
+    w = jnp.exp(logw)
+
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)
+    y = jnp.einsum("bhi,bhij->bhj", r,
+                   params["u"][None, :, :, None] * kv + state.wkv)
+    wkv_new = state.wkv * w[..., None] + kv
+    y = y.reshape(B, d).astype(x.dtype)
+    y = layer_norm(y, params["ln_x_w"], params["ln_x_b"], cfg.norm_eps) * g
+    out = y @ params["wo"]
+
+    xk_f = xt + (state.shift_ffn - xt) * params["mu_ffn"][0]
+    xr_f = xt + (state.shift_ffn - xt) * params["mu_ffn"][1]
+    kf = jnp.square(jax.nn.relu(xk_f @ params["ffn_k"]))
+    ffn = jax.nn.sigmoid(xr_f @ params["ffn_r"]) * (kf @ params["ffn_v"])
+
+    return (out + ffn)[:, None, :], RWKVState(xt, wkv_new, xt)

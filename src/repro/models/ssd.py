@@ -1,0 +1,194 @@
+"""Mamba2 block (State-Space Duality form), chunked for TPU.
+
+The SSD recurrence per head (state N, head dim P):
+
+    s_t = a_t · s_{t-1} + dt_t · (B_t ⊗ x_t)       a_t = exp(dt_t · A) ∈ (0,1)
+    y_t = C_t · s_t + D · x_t
+
+is evaluated chunk-parallel (chunk Q): within a chunk the contribution is an
+attention-like masked matmul; across chunks a short ``lax.scan`` propagates
+the (B, H, P, N) state.  This is the canonical TPU-friendly decomposition
+(quadratic-in-Q intra + linear inter), matching Mamba2's reference algorithm.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+from .layers import dense_init, rms_norm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, W-1, conv_channels) rolling conv input window
+    ssm: jax.Array    # (B, H, P, N) recurrent state
+
+
+def init_mamba2(cfg: ArchConfig, key: jax.Array, dtype) -> Dict:
+    d, di, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    H = cfg.ssm_num_heads
+    conv_ch = di + 2 * N
+    keys = jax.random.split(key, 5)
+    return {
+        # order: [z (di), x (di), B (N), C (N), dt (H)]
+        "in_proj": dense_init(keys[0], d, 2 * di + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(keys[1], (cfg.ssm_conv_width, conv_ch))
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(keys[2], di, d, dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. u: (B, S, C), w: (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def _ssd_chunked(xh: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, chunk: int, init_state: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """xh (B,S,H,P), dt (B,S,H), A (H,) negative, Bm/Cm (B,S,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)), constant_values=0.0) \
+            if dt.ndim == 2 else jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    # chunked views: (nc, B, Q, ...)
+    xc = xh.reshape(B, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    alog = dtc * A                                  # (nc,B,Q,H)  ≤ 0
+    cum = jnp.cumsum(alog, axis=2)                  # inclusive cumulative
+
+    def chunk_step(state, inp):
+        xq, dtq, Bq, Cq, cumq, alq = inp            # per-chunk slices
+        # intra-chunk: M[b,h,q,s] = exp(cum_q - cum_s)·dt_s·(C_q·B_s), s ≤ q
+        CB = jnp.einsum("bqn,bsn->bqs", Cq.astype(jnp.float32),
+                        Bq.astype(jnp.float32))
+        # valid (s ≤ q) exponents are ≤ 0 (cum is non-increasing), so the
+        # clamp is exact there and prevents masked-pair exp overflow from
+        # poisoning gradients (inf·0 → NaN in the where-backward).
+        diff = jnp.minimum(cumq[:, :, None, :] - cumq[:, None, :, :], 0.0)
+        decay = jnp.exp(diff)                                       # (B,q,s,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        M = jnp.where(mask[None, :, :, None], decay, 0.0) \
+            * CB[:, :, :, None] * dtq[:, None, :, :]
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", M,
+                             xq.astype(jnp.float32))
+        # inter-chunk: y_inter[q] = exp(cum_q) · C_q · state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", Cq.astype(jnp.float32),
+                             state) * jnp.exp(cumq)[..., None]
+        # state update: s' = exp(cum_Q)·s + Σ_s exp(cum_Q − cum_s)·dt_s·x_s⊗B_s
+        total = cumq[:, -1, :]                       # (B,H)
+        w_s = jnp.exp(total[:, None, :] - cumq) * dtq     # (B,Q,H)
+        state_new = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bqh,bqhp,bqn->bhpn", w_s, xq.astype(jnp.float32),
+            Bq.astype(jnp.float32))
+        return state_new, y_intra + y_inter
+
+    final_state, yc = lax.scan(chunk_step, init_state.astype(jnp.float32),
+                               (xc, dtc, Bc, Cc, cum, alog))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, P)[:, :S]
+    return y, final_state
+
+
+def mamba2_forward(cfg: ArchConfig, params: Dict, x: jax.Array,
+                   init_state: SSMState | None = None
+                   ) -> Tuple[jax.Array, SSMState]:
+    """Full-sequence forward. x: (B, S, d) → (out (B,S,d), final SSMState)."""
+    B, S, d = x.shape
+    di, N, H, P = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    proj = x @ params["in_proj"]
+    z, xin, Bm, Cm, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    W = cfg.ssm_conv_width
+    if init_state is not None:
+        # continue the causal conv across segment boundaries (prefill-then-
+        # continue): prepend the carried W−1 inputs instead of zero padding
+        ext = jnp.concatenate([init_state.conv.astype(conv_in.dtype),
+                               conv_in], axis=1)
+        conv_out = jax.nn.silu(_causal_conv(ext, params["conv_w"],
+                                            params["conv_b"]))[:, W - 1:]
+    else:
+        conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
+                                            params["conv_b"]))
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xin.reshape(B, S, H, P)
+    state0 = (init_state.ssm if init_state is not None
+              else jnp.zeros((B, H, P, N), jnp.float32))
+    y, state = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, state0)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+
+    if init_state is not None:
+        hist = jnp.concatenate([init_state.conv.astype(conv_in.dtype),
+                                conv_in], axis=1)
+    else:
+        hist = jnp.pad(conv_in, ((0, 0), (max(W - 1 - S, 0), 0), (0, 0)))
+    conv_tail = hist[:, -(W - 1):, :]
+    return out, SSMState(conv_tail.astype(x.dtype), state)
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype) -> SSMState:
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    H, P = cfg.ssm_num_heads, cfg.ssm_head_dim
+    conv_ch = di + 2 * N
+    return SSMState(jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+                    jnp.zeros((batch, H, P, N), jnp.float32))
+
+
+def mamba2_decode(cfg: ArchConfig, params: Dict, x: jax.Array,
+                  state: SSMState) -> Tuple[jax.Array, SSMState]:
+    """Single-token decode. x: (B, 1, d)."""
+    B = x.shape[0]
+    di, N, H, P = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    proj = (x[:, 0] @ params["in_proj"])
+    z, xin, Bm, Cm, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)     # (B, C)
+    window = jnp.concatenate([state.conv, conv_in[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+        + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                    # (B,H)
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    s_new = state.ssm * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), s_new)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, SSMState(window[:, 1:], s_new)

@@ -1,0 +1,421 @@
+"""Decoder-only LM assembly for the dense / MoE / SSM / hybrid families.
+
+Uniform layers are *stacked* (leading L axis) and driven with ``lax.scan`` so
+the lowered HLO stays compact for 40-64 layer architectures; the Zamba2
+hybrid interleaves scanned Mamba2 groups with a single SHARED attention
+block (its defining feature) applied every ``attn_every`` layers.
+
+Three entry points per model (what the dry-run lowers):
+  * ``forward_train`` — full-sequence teacher-forced logits (+ MoE aux loss)
+  * ``prefill``       — full sequence, returns last-token logits + caches
+  * ``decode_step``   — one token against the cache (serve_step)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .attention import (KVCache, attention_decode, attention_forward,
+                        init_attention, init_kv_cache)
+from .config import ArchConfig
+from .layers import dtype_of, embed_init, rms_norm
+from .mlp import init_mlp, mlp_forward
+from .moe import init_moe, moe_forward
+from .rwkv import (RWKVState, init_rwkv6, init_rwkv_state, rwkv6_decode,
+                   rwkv6_forward)
+from .ssd import (SSMState, init_mamba2, init_ssm_state, mamba2_decode,
+                  mamba2_forward)
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------- init
+
+def _init_block(cfg: ArchConfig, key: jax.Array, dtype) -> Dict:
+    """One layer's params for the uniform-stack families."""
+    keys = jax.random.split(key, 3)
+    if cfg.family == "ssm" and cfg.rwkv:
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "rwkv": init_rwkv6(cfg, keys[0], dtype)}
+    if cfg.family == "ssm":
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "mamba": init_mamba2(cfg, keys[0], dtype)}
+    block = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+             "ln2": jnp.zeros((cfg.d_model,), dtype),
+             "attn": init_attention(cfg, keys[0], dtype)}
+    if cfg.family == "moe":
+        block["moe"] = init_moe(cfg, keys[1], dtype)
+    else:
+        block["mlp"] = init_mlp(cfg, keys[1], dtype)
+    return block
+
+
+def init_lm(cfg: ArchConfig, key: jax.Array) -> Pytree:
+    dtype = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[1], cfg.vocab_size, cfg.d_model,
+                                       dtype).T
+
+    if cfg.family == "hybrid":
+        n_groups = cfg.num_layers // cfg.attn_every
+        rem = cfg.num_layers % cfg.attn_every
+        def make_mamba(k):
+            return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                    "mamba": init_mamba2(cfg, k, dtype)}
+        gk = jax.random.split(keys[2], n_groups * cfg.attn_every)
+        params["blocks"] = jax.vmap(make_mamba)(
+            gk.reshape(n_groups * cfg.attn_every, -1))
+        # reshape leading axis to (n_groups, attn_every)
+        params["blocks"] = jax.tree_util.tree_map(
+            lambda p: p.reshape((n_groups, cfg.attn_every) + p.shape[1:]),
+            params["blocks"])
+        if rem:
+            rk = jax.random.split(keys[3], rem)
+            params["blocks_rem"] = jax.vmap(make_mamba)(rk)
+        # the SHARED transformer block (attention + MLP)
+        params["shared_attn"] = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attention(cfg, keys[4], dtype),
+            "mlp": init_mlp(cfg, keys[5], dtype),
+        }
+    else:
+        lk = jax.random.split(keys[2], cfg.num_layers)
+        params["blocks"] = jax.vmap(lambda k: _init_block(cfg, k, dtype))(lk)
+    return params
+
+
+# ------------------------------------------------------------------ forward
+
+def _block_forward(cfg: ArchConfig, p: Dict, x: jax.Array,
+                   positions: jax.Array, window: Optional[int],
+                   state_in=None, return_kv: bool = False):
+    """One layer. Returns (x, aux, extra) where extra is kv or new ssm state."""
+    aux = jnp.zeros((), jnp.float32)
+    extra = None
+    if "rwkv" in p:
+        out, extra = rwkv6_forward(cfg, p["rwkv"],
+                                   rms_norm(x, p["ln1"], cfg.norm_eps),
+                                   state_in)
+        return x + out, aux, extra
+    if "mamba" in p:
+        out, extra = mamba2_forward(cfg, p["mamba"],
+                                    rms_norm(x, p["ln1"], cfg.norm_eps),
+                                    state_in)
+        return x + out, aux, extra
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    mode = "window" if window is not None else "causal"
+    if return_kv:
+        attn, kv = attention_forward(cfg, p["attn"], h, positions, mode=mode,
+                                     window=window, return_kv=True)
+        extra = kv
+    else:
+        attn = attention_forward(cfg, p["attn"], h, positions, mode=mode,
+                                 window=window)
+    x = x + attn
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        ff, aux = moe_forward(cfg, p["moe"], h)
+    else:
+        ff = mlp_forward(cfg, p["mlp"], h)
+    return x + ff, aux, extra
+
+
+def _logits(cfg: ArchConfig, params: Pytree, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head
+
+
+def remat_wrap(body, remat):
+    """Apply the activation-checkpoint policy to a scanned layer body.
+
+    ``remat``: False/None → no remat; True/"full" → checkpoint everything
+    (maximum recompute, minimum memory — the baseline policy);
+    "dots" → ``dots_with_no_batch_dims_saveable`` (save matmul outputs,
+    recompute only cheap elementwise ops — §Perf iteration 2)."""
+    if not remat:
+        return body
+    if remat in (True, "full"):
+        return jax.checkpoint(body)
+    if remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+def forward_train(cfg: ArchConfig, params: Pytree, tokens: jax.Array,
+                  window: Optional[int] = None, remat=False
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) → (logits (B,S,V), aux_loss).
+
+    ``remat`` selects the per-layer activation-checkpoint policy
+    (see :func:`remat_wrap`)."""
+    B, S = tokens.shape
+    window = window if window is not None else cfg.sliding_window
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)
+
+    if cfg.family == "hybrid":
+        x, aux = _hybrid_forward(cfg, params, x, positions, window, remat)
+    else:
+        def body(carry, layer_p):
+            h, aux = carry
+            h, a, _ = _block_forward(cfg, layer_p, h, positions, window)
+            return (h, aux + a), None
+        body = remat_wrap(body, remat)
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return _logits(cfg, params, x), aux
+
+
+def _hybrid_forward(cfg: ArchConfig, params: Pytree, x: jax.Array,
+                    positions: jax.Array, window: Optional[int],
+                    remat=False):
+    """Zamba2: scanned Mamba2 groups + the shared attention block between
+    groups (same weights every invocation)."""
+    shared = params["shared_attn"]
+
+    def mamba_body(h, layer_p):
+        h, _, _ = _block_forward(cfg, layer_p, h, positions, None)
+        return h, None
+
+    mamba_body = remat_wrap(mamba_body, remat)
+
+    def group_body(h, group_p):
+        h, _ = lax.scan(mamba_body, h, group_p)
+        # shared attention block
+        a = rms_norm(h, shared["ln1"], cfg.norm_eps)
+        mode = "window" if window is not None else "causal"
+        h = h + attention_forward(cfg, shared["attn"], a, positions,
+                                  mode=mode, window=window)
+        m = rms_norm(h, shared["ln2"], cfg.norm_eps)
+        h = h + mlp_forward(cfg, shared["mlp"], m)
+        return h, None
+
+    x, _ = lax.scan(group_body, x, params["blocks"])
+    if "blocks_rem" in params:
+        x, _ = lax.scan(mamba_body, x, params["blocks_rem"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------ prefill/decode
+
+class LMCache(NamedTuple):
+    """Per-family cache container (unused fields are None)."""
+    kv: Optional[KVCache]            # (L, B, S, KVH, hd) stacked over layers
+    ssm: Optional[Any]               # stacked SSMState / RWKVState
+    shared_kv: Optional[KVCache]     # hybrid: (G, B, S, KVH, hd)
+    position: jax.Array
+
+
+def cache_capacity(cfg: ArchConfig, max_seq: int) -> int:
+    """KV-cache slots: ring-buffer bounded by the sliding window (§Perf #3)."""
+    if cfg.sliding_window is not None:
+        return min(max_seq, cfg.sliding_window)
+    return max_seq
+
+
+def init_lm_cache(cfg: ArchConfig, batch: int, max_seq: int) -> LMCache:
+    dtype = dtype_of(cfg.dtype)
+    cap = cache_capacity(cfg, max_seq)
+    stack = lambda tree, n: jax.tree_util.tree_map(
+        lambda z: jnp.broadcast_to(z, (n,) + z.shape), tree)
+    kv = ssm = shared = None
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = stack(init_kv_cache(cfg, batch, cap, dtype), cfg.num_layers)
+    elif cfg.family == "ssm" and cfg.rwkv:
+        ssm = stack(init_rwkv_state(cfg, batch, dtype), cfg.num_layers)
+    elif cfg.family == "ssm":
+        ssm = stack(init_ssm_state(cfg, batch, dtype), cfg.num_layers)
+    elif cfg.family == "hybrid":
+        ssm = stack(init_ssm_state(cfg, batch, dtype), cfg.num_layers)
+        n_groups = cfg.num_layers // cfg.attn_every
+        shared = stack(init_kv_cache(cfg, batch, cap, dtype), n_groups)
+    return LMCache(kv, ssm, shared, jnp.zeros((), jnp.int32))
+
+
+def prefill(cfg: ArchConfig, params: Pytree, tokens: jax.Array,
+            max_seq: int, window: Optional[int] = None
+            ) -> Tuple[jax.Array, LMCache]:
+    """Run the full prompt, build the cache, return last-position logits."""
+    B, S = tokens.shape
+    window = window if window is not None else cfg.sliding_window
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)
+    cache = init_lm_cache(cfg, B, max_seq)
+
+    if cfg.family == "hybrid":
+        x, new_ssm, new_shared = _hybrid_prefill(cfg, params, x, positions,
+                                                 window, cache, S)
+        cache = cache._replace(ssm=new_ssm, shared_kv=new_shared,
+                               position=jnp.asarray(S, jnp.int32))
+    elif cfg.family == "ssm":
+        def body(carry, inp):
+            h = carry
+            layer_p, st = inp
+            h, _, new_state = _block_forward(cfg, layer_p, h, positions, None,
+                                             state_in=st)
+            return h, new_state
+        x, new_states = lax.scan(body, x, (params["blocks"], cache.ssm))
+        cache = cache._replace(ssm=new_states,
+                               position=jnp.asarray(S, jnp.int32))
+    else:
+        def body(carry, layer_p):
+            h = carry
+            h, _, kv = _block_forward(cfg, layer_p, h, positions, window,
+                                      return_kv=True)
+            return h, kv
+        x, kvs = lax.scan(body, x, params["blocks"])
+        k_stack, v_stack = kvs
+        # place prompt K/V into the cache (ring-placed when window-bounded)
+        from .attention import ring_place
+        cap = cache_capacity(cfg, max_seq)
+        kc = ring_place(k_stack, cap)
+        vc = ring_place(v_stack, cap)
+        cache = cache._replace(kv=KVCache(kc.astype(dtype_of(cfg.dtype)),
+                                          vc.astype(dtype_of(cfg.dtype))),
+                               position=jnp.asarray(S, jnp.int32))
+    logits = _logits(cfg, params, x[:, -1:, :])
+    return logits[:, 0], cache
+
+
+def _hybrid_prefill(cfg, params, x, positions, window, cache, S):
+    from .attention import ring_place
+    shared = params["shared_attn"]
+    n_groups = cfg.num_layers // cfg.attn_every
+    capacity = cache.shared_kv.k.shape[2]
+
+    # remainder layers' states live at the tail of cache.ssm
+    main_ssm = jax.tree_util.tree_map(
+        lambda z: z[:n_groups * cfg.attn_every].reshape(
+            (n_groups, cfg.attn_every) + z.shape[1:]), cache.ssm)
+    rem = cfg.num_layers % cfg.attn_every
+    rem_ssm = jax.tree_util.tree_map(lambda z: z[n_groups * cfg.attn_every:],
+                                     cache.ssm)
+
+    def mamba_body(h, inp):
+        layer_p, st = inp
+        h, _, new_state = _block_forward(cfg, layer_p, h, positions, None,
+                                         state_in=st)
+        return h, new_state
+
+    def group_body(h, inp):
+        group_p, g_ssm = inp
+        h, new_states = lax.scan(mamba_body, h, (group_p, g_ssm))
+        a = rms_norm(h, shared["ln1"], cfg.norm_eps)
+        mode = "window" if window is not None else "causal"
+        attn, (k, v) = attention_forward(cfg, shared["attn"], a, positions,
+                                         mode=mode, window=window,
+                                         return_kv=True)
+        h = h + attn
+        m = rms_norm(h, shared["ln2"], cfg.norm_eps)
+        h = h + mlp_forward(cfg, shared["mlp"], m)
+        return h, (new_states, KVCache(ring_place(k, capacity),
+                                       ring_place(v, capacity)))
+
+    x, (new_main_ssm, shared_kv) = lax.scan(group_body, x,
+                                            (params["blocks"], main_ssm))
+    new_ssm_flat = jax.tree_util.tree_map(
+        lambda z: z.reshape((n_groups * cfg.attn_every,) + z.shape[2:]),
+        new_main_ssm)
+    if rem:
+        x, new_rem = lax.scan(mamba_body, x, (params["blocks_rem"], rem_ssm))
+        new_ssm_flat = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), new_ssm_flat, new_rem)
+    return x, new_ssm_flat, shared_kv
+
+
+def decode_step(cfg: ArchConfig, params: Pytree, token: jax.Array,
+                cache: LMCache, window: Optional[int] = None
+                ) -> Tuple[jax.Array, LMCache]:
+    """token (B,) int32 → (logits (B,V), updated cache)."""
+    B = token.shape[0]
+    window = window if window is not None else cfg.sliding_window
+    x = params["embed"][token][:, None, :]     # (B,1,d)
+    pos = cache.position
+
+    if cfg.family == "hybrid":
+        x, new_ssm, new_shared = _hybrid_decode(cfg, params, x, cache, window)
+        new_cache = cache._replace(ssm=new_ssm, shared_kv=new_shared,
+                                   position=pos + 1)
+    elif cfg.family == "ssm":
+        step = rwkv6_decode if cfg.rwkv else mamba2_decode
+        name = "rwkv" if cfg.rwkv else "mamba"
+        def body(h, inp):
+            layer_p, st = inp
+            out, new_state = step(cfg, layer_p[name],
+                                  rms_norm(h, layer_p["ln1"], cfg.norm_eps), st)
+            return h + out, new_state
+        x, new_states = lax.scan(body, x, (params["blocks"], cache.ssm))
+        new_cache = cache._replace(ssm=new_states, position=pos + 1)
+    else:
+        def body(h, inp):
+            layer_p, ck, cv = inp
+            a = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
+            attn, new_kv = attention_decode(cfg, layer_p["attn"], a,
+                                            KVCache(ck, cv), pos,
+                                            window=window)
+            h = h + attn
+            m = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+            if "moe" in layer_p:
+                ff, _ = moe_forward(cfg, layer_p["moe"], m)
+            else:
+                ff = mlp_forward(cfg, layer_p["mlp"], m)
+            return h + ff, new_kv
+        x, new_kv = lax.scan(body, x, (params["blocks"], cache.kv.k,
+                                       cache.kv.v))
+        new_cache = cache._replace(kv=KVCache(new_kv.k, new_kv.v),
+                                   position=pos + 1)
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], new_cache
+
+
+def _hybrid_decode(cfg, params, x, cache: LMCache, window):
+    shared = params["shared_attn"]
+    n_groups = cfg.num_layers // cfg.attn_every
+    rem = cfg.num_layers % cfg.attn_every
+    pos = cache.position
+
+    main_ssm = jax.tree_util.tree_map(
+        lambda z: z[:n_groups * cfg.attn_every].reshape(
+            (n_groups, cfg.attn_every) + z.shape[1:]), cache.ssm)
+    rem_ssm = jax.tree_util.tree_map(lambda z: z[n_groups * cfg.attn_every:],
+                                     cache.ssm)
+
+    def mamba_body(h, inp):
+        layer_p, st = inp
+        out, new_state = mamba2_decode(
+            cfg, layer_p["mamba"], rms_norm(h, layer_p["ln1"], cfg.norm_eps), st)
+        return h + out, new_state
+
+    def group_body(h, inp):
+        group_p, g_ssm, ck, cv = inp
+        h, new_states = lax.scan(mamba_body, h, (group_p, g_ssm))
+        a = rms_norm(h, shared["ln1"], cfg.norm_eps)
+        attn, new_kv = attention_decode(cfg, shared["attn"], a,
+                                        KVCache(ck, cv), pos, window=window)
+        h = h + attn
+        m = rms_norm(h, shared["ln2"], cfg.norm_eps)
+        h = h + mlp_forward(cfg, shared["mlp"], m)
+        return h, (new_states, new_kv)
+
+    x, (new_main, new_shared) = lax.scan(
+        group_body, x, (params["blocks"], main_ssm,
+                        cache.shared_kv.k, cache.shared_kv.v))
+    new_flat = jax.tree_util.tree_map(
+        lambda z: z.reshape((n_groups * cfg.attn_every,) + z.shape[2:]),
+        new_main)
+    if rem:
+        x, new_rem = lax.scan(mamba_body, x, (params["blocks_rem"], rem_ssm))
+        new_flat = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), new_flat, new_rem)
+    return x, new_flat, KVCache(new_shared.k, new_shared.v)

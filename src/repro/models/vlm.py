@@ -1,0 +1,98 @@
+"""Chameleon-style early-fusion VLM backbone.
+
+Chameleon tokenizes images into VQ codes consumed by the same decoder as
+text.  Per the brief the image tokenizer is a STUB: ``input_specs`` provides
+precomputed patch/code embeddings (B, n_img, d_model); this module projects
+and concatenates them ahead of the text tokens in one causal stream — the
+defining early-fusion pattern — and otherwise reuses the dense decoder.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import dense_init, dtype_of
+from .transformer import (LMCache, _logits, decode_step, forward_train,
+                          init_lm, init_lm_cache, prefill)
+
+Pytree = Any
+
+
+def init_vlm(cfg: ArchConfig, key: jax.Array) -> Pytree:
+    k1, k2 = jax.random.split(key)
+    params = init_lm(cfg, k1)
+    params["img_proj"] = dense_init(k2, cfg.d_model, cfg.d_model,
+                                    dtype_of(cfg.dtype))
+    return params
+
+
+def _fuse(cfg: ArchConfig, params: Pytree, tokens: jax.Array,
+          image_embeds: jax.Array) -> jax.Array:
+    """[projected image embeddings ; text embeddings] along the seq axis."""
+    img = image_embeds.astype(params["embed"].dtype) @ params["img_proj"]
+    txt = params["embed"][tokens]
+    return jnp.concatenate([img, txt], axis=1)
+
+
+def vlm_forward_train(cfg: ArchConfig, params: Pytree, tokens: jax.Array,
+                      image_embeds: jax.Array, window=None,
+                      remat=False) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S_text), image_embeds (B, n_img, d).  Returns logits over
+    the FULL fused sequence (loss masks the image positions)."""
+    from jax import lax
+
+    from .transformer import _block_forward
+
+    window = window if window is not None else cfg.sliding_window
+    x = _fuse(cfg, params, tokens, image_embeds)
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h, a, _ = _block_forward(cfg, layer_p, h, positions, window)
+        return (h, aux + a), None
+
+    from .transformer import remat_wrap
+    body = remat_wrap(body, remat)
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                           params["blocks"])
+    return _logits(cfg, params, x), aux
+
+
+def vlm_prefill(cfg: ArchConfig, params: Pytree, tokens: jax.Array,
+                image_embeds: jax.Array, max_seq: int, window=None
+                ) -> Tuple[jax.Array, LMCache]:
+    """Prefill over the fused stream; decode then continues text-only."""
+    from jax import lax
+
+    from .attention import KVCache
+    from .layers import rms_norm
+    from .transformer import _block_forward
+
+    window = window if window is not None else cfg.sliding_window
+    x = _fuse(cfg, params, tokens, image_embeds)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    cache = init_lm_cache(cfg, B, max_seq)
+
+    def body(h, layer_p):
+        h, _, kv = _block_forward(cfg, layer_p, h, positions, window,
+                                  return_kv=True)
+        return h, kv
+
+    x, (ks, vs) = lax.scan(body, x, params["blocks"])
+    from .attention import ring_place
+    from .transformer import cache_capacity
+    cap = cache_capacity(cfg, max_seq)
+    kc, vc = ring_place(ks, cap), ring_place(vs, cap)
+    dt = dtype_of(cfg.dtype)
+    cache = cache._replace(kv=KVCache(kc.astype(dt), vc.astype(dt)),
+                           position=jnp.asarray(S, jnp.int32))
+    logits = _logits(cfg, params, x[:, -1:, :])
+    return logits[:, 0], cache
+
+
+vlm_decode_step = decode_step   # decode continues text-only — same as dense

@@ -1,0 +1,98 @@
+"""Minimal, pytree-native optimizers (no optax in this container).
+
+All optimizers share the functional interface
+
+    state = <name>_init(params)
+    new_params, new_state = <name>_update(params, grads, state, lr, **kw)
+
+``make_optimizer(name, **defaults)`` returns an ``(init, update)`` pair with
+the hyper-parameters bound, which is what the FL client loop and the
+distributed train step consume.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class SGDState(NamedTuple):
+    momentum: Pytree           # zeros-like(params) when momentum == 0 too
+    count: jax.Array
+
+
+class AdamWState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    count: jax.Array
+
+
+OptState = Any
+
+
+def sgd_init(params: Pytree) -> SGDState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return SGDState(momentum=zeros, count=jnp.zeros((), jnp.int32))
+
+
+def sgd_update(params: Pytree, grads: Pytree, state: SGDState, lr,
+               momentum: float = 0.0, weight_decay: float = 0.0,
+               nesterov: bool = False) -> Tuple[Pytree, SGDState]:
+    def upd(p, g, m):
+        g = g + weight_decay * p if weight_decay else g
+        m_new = momentum * m + g
+        step = (g + momentum * m_new) if nesterov else (m_new if momentum else g)
+        return (p - lr * step).astype(p.dtype), m_new.astype(m.dtype)
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state.momentum)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_mom = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, SGDState(new_mom, state.count + 1)
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    zeros32 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(mu=zeros32,
+                      nu=jax.tree_util.tree_map(jnp.copy, zeros32),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params: Pytree, grads: Pytree, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.0) -> Tuple[Pytree, AdamWState]:
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu_new = b1 * mu + (1 - b1) * g32
+        nu_new = b2 * nu + (1 - b2) * g32 * g32
+        step = (mu_new / c1) / (jnp.sqrt(nu_new / c2) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p - lr * step).astype(p.dtype), mu_new, nu_new
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdamWState(pick(1), pick(2), count)
+
+
+def make_optimizer(name: str, **defaults) -> Tuple[Callable, Callable]:
+    """Return ``(init_fn, update_fn(params, grads, state, lr))`` with the
+    hyper-parameters bound."""
+    if name == "sgd":
+        def update(params, grads, state, lr):
+            return sgd_update(params, grads, state, lr, **defaults)
+        return sgd_init, update
+    if name == "adamw":
+        def update(params, grads, state, lr):
+            return adamw_update(params, grads, state, lr, **defaults)
+        return adamw_init, update
+    raise KeyError(f"unknown optimizer '{name}'")

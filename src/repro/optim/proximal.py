@@ -1,0 +1,34 @@
+"""FedProx proximal objective wrapper (Li et al. 2020, paper ref [8]).
+
+FedProx adds ``(μ/2)·‖w − w_global‖²`` to each client's local objective so
+local optimization cannot drift arbitrarily far from the round's global
+parameters.  The paper's FedProx (Contextual) variant = this local objective
++ the contextual server aggregation.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def proximal_loss_fn(loss_fn: Callable, mu: float) -> Callable:
+    """Wrap ``loss_fn(params, batch) -> scalar`` with the proximal term.
+
+    The returned function has signature ``(params, batch, anchor) -> scalar``
+    where ``anchor`` is the round's global parameters w^t.
+    """
+    if mu == 0.0:
+        return lambda params, batch, anchor: loss_fn(params, batch)
+
+    def wrapped(params: Pytree, batch, anchor: Pytree):
+        base = loss_fn(params, batch)
+        sq = sum(jnp.sum((p.astype(jnp.float32) - a.astype(jnp.float32)) ** 2)
+                 for p, a in zip(jax.tree_util.tree_leaves(params),
+                                 jax.tree_util.tree_leaves(anchor)))
+        return base + 0.5 * mu * sq
+
+    return wrapped

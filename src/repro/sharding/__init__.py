@@ -1,0 +1,3 @@
+from .specs import (batch_pspec, cache_pspecs, param_pspecs, spec_for_leaf)
+
+__all__ = ["batch_pspec", "cache_pspecs", "param_pspecs", "spec_for_leaf"]

@@ -1,0 +1,164 @@
+"""Partition-spec rules (DESIGN.md §7).
+
+Strategy per tensor class (mesh axes: optional 'pod', 'data', 'model'):
+
+  * large 2-D projection weights — tensor-parallel on the contraction-free
+    dim over 'model'; for ≥`fsdp_threshold` params additionally FSDP the
+    other dim over 'data' (all-gathered per layer by GSPMD on use);
+  * expert tensors (E, d, ff) — expert-parallel: E over 'model';
+  * embeddings (V, d) — vocab over 'model' (+ d over 'data' when FSDP);
+  * norms / biases / small vectors — replicated;
+  * activations: batch over 'data' ('pod','data' when multi-pod);
+  * KV caches: batch over 'data', seq over 'model' (flash-decode LSE
+    sharding — valid for every arch since seq always divides, unlike
+    kv_heads);  long_500k (batch 1): seq over ('data','model').
+
+Every axis assignment is guarded by divisibility; a non-dividing axis is
+dropped (replicated) rather than producing an invalid sharding.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ArchConfig
+
+Pytree = Any
+
+FSDP_THRESHOLD = 7_000_000_000   # params; ≥7B also shards over 'data'
+
+
+def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh: Mesh, name) -> bool:
+    return dim % _axis_size(mesh, name) == 0
+
+
+def _guard(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axis assignments that don't divide the corresponding dim."""
+    out = []
+    for dim, name in zip(shape, spec):
+        out.append(name if name is not None and _fits(dim, mesh, name) else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def spec_for_leaf(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+                  fsdp: bool) -> P:
+    """Rule table: first match wins.  `shape` includes any leading stacked
+    layer axis (we detect and skip it)."""
+    d_axis = "data" if fsdp else None
+    rules = [
+        # --- MoE expert tensors (L, E, d, ff) / (E, d, ff)
+        (r"moe/w_(up|gate|down)$", lambda s: ("model", d_axis, None)),
+        (r"moe/router$", lambda s: (None, None)),
+        # --- embeddings / unembeddings
+        (r"(^|/)embed$", lambda s: ("model", d_axis)),
+        (r"(^|/)lm_head$", lambda s: (d_axis, "model")),
+        (r"img_proj$", lambda s: (None, "model")),
+        # --- attention projections (column-parallel qkv, row-parallel o)
+        (r"attn/w[qkv]$|cross/w[qkv]$", lambda s: (d_axis, "model")),
+        (r"attn/wo$|cross/wo$", lambda s: ("model", d_axis)),
+        (r"attn/b[qkv]$|cross/b[qkv]$", lambda s: ("model",)),
+        # --- dense MLP (column-parallel up/gate, row-parallel down)
+        (r"mlp/w_(up|gate)$|shared/w_(up|gate)$", lambda s: (d_axis, "model")),
+        (r"mlp/w_down$|shared/w_down$", lambda s: ("model", d_axis)),
+        # --- mamba2
+        (r"mamba/in_proj$", lambda s: (d_axis, "model")),
+        (r"mamba/out_proj$", lambda s: ("model", d_axis)),
+        (r"mamba/conv_[wb]$", lambda s: (None,) * len(s)),
+        # --- rwkv6
+        (r"rwkv/(wr|wk|wv|wg|ffn_k|ffn_r|w_A)$", lambda s: (d_axis, "model")),
+        (r"rwkv/(wo|ffn_v|w_B)$", lambda s: ("model", d_axis)),
+    ]
+    for pat, builder in rules:
+        if re.search(pat, path_str):
+            spec = builder(shape)
+            # leading stacked-layer axes (scan stacks) stay unsharded
+            lead = len(shape) - len(spec)
+            return _guard((None,) * lead + tuple(spec), shape, mesh)
+    return P()   # replicate (norms, scalars, small vectors)
+
+
+def param_pspecs(cfg: ArchConfig, params_shape: Pytree, mesh: Mesh,
+                 mode: str = "tp") -> Pytree:
+    """Map a pytree of ShapeDtypeStructs (or arrays) to PartitionSpecs.
+
+    ``mode='tp'`` — tensor/expert-parallel over 'model' (+FSDP ≥7B);
+    ``mode='dp'`` — fully replicated params (§Perf iteration 1: small models
+    use every mesh axis as data parallelism; the per-layer TP all-reduces
+    disappear and the only collective left is the cohort combine)."""
+    if mode == "dp":
+        flat, treedef = jax.tree_util.tree_flatten(params_shape)
+        return jax.tree_util.tree_unflatten(treedef, [P()] * len(flat))
+    fsdp = cfg.param_count_estimate() >= FSDP_THRESHOLD
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [spec_for_leaf(_path_str(p), tuple(l.shape), mesh, fsdp)
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspec(mesh: Mesh, batch_size: int) -> P:
+    """Sharding for the leading batch axis of inputs."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    name = tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+    if name is None or batch_size % _axis_size(mesh, name) != 0:
+        # try data only, else replicate (long_500k batch=1)
+        if "data" in mesh.shape and batch_size % mesh.shape["data"] == 0:
+            return P("data")
+        return P(None)
+    return P(name)
+
+
+def cache_pspecs(cfg: ArchConfig, cache_shape: Pytree, mesh: Mesh,
+                 batch_size: int) -> Pytree:
+    """KV caches: (L, B, S, KV, hd) → batch@data, seq@model; batch-1 decode
+    shards seq over ('data','model').  SSM states: (L, B, H, P[, N]) →
+    batch@data, heads@model."""
+    bspec = batch_pspec(mesh, batch_size)
+    batch_axis = bspec[0] if len(bspec) else None
+    seq_axes = ("model",) if batch_axis is not None else \
+        tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    seq_axis = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+
+    def leaf_spec(path, leaf):
+        shape = tuple(leaf.shape)
+        name = _path_str(path)
+        if leaf.ndim == 0 or "position" in name:
+            return P()
+        if leaf.ndim == 5:      # (L, B, S, KV, hd) stacked KV cache
+            return _guard((None, batch_axis, seq_axis, None, None), shape, mesh)
+        if leaf.ndim == 4 and "wkv" in name:    # rwkv (L?, B, H, P, P)…
+            return _guard((None, batch_axis, "model", None), shape, mesh)
+        if leaf.ndim == 5 and "ssm" in name:
+            return _guard((None, batch_axis, "model", None, None), shape, mesh)
+        if leaf.ndim == 4:      # (L, B, W, C) conv state or (B,S,KV,hd)
+            return _guard((None, batch_axis, None, None), shape, mesh)
+        if leaf.ndim == 3:
+            return _guard((None, batch_axis, None), shape, mesh)
+        if leaf.ndim == 2:
+            return _guard((None, batch_axis), shape, mesh)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = [leaf_spec(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, tree_of_specs: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))

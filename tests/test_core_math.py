@@ -1,0 +1,172 @@
+"""Unit + property tests for the contextual aggregation math (paper §III)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AggregatorConfig, SolveConfig, aggregate,
+                        bound_value, gram_and_cross, gram_and_cross_chunked,
+                        gram_residual, solve_alpha, solve_alpha_simple,
+                        theorem1_reduction, tree_to_vector, vector_to_tree)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _quadratic(key, n):
+    """Random β-smooth quadratic f(w) = ½wᵀAw − bᵀw with known β = λmax(A)."""
+    k1, k2 = jax.random.split(key)
+    A = jax.random.normal(k1, (n, n))
+    A = A @ A.T / n + jnp.eye(n)
+    b = jax.random.normal(k2, (n,))
+    beta = float(jnp.linalg.eigvalsh(A)[-1])
+    f = lambda w: 0.5 * w @ A @ w - b @ w
+    return f, beta
+
+
+@pytest.mark.parametrize("K,n", [(4, 64), (10, 200), (16, 300)])
+def test_stationarity_paper_eq10(K, n):
+    """α* satisfies the paper's optimality identity ⟨Δ_k, ∇f + βΣα_jΔ_j⟩ = 0."""
+    key = jax.random.PRNGKey(K * n)
+    f, beta = _quadratic(key, n)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    g = jax.grad(f)(w)
+    U = -0.05 * (g[None] + 0.5 * jax.random.normal(jax.random.PRNGKey(2), (K, n)))
+    G, c = gram_and_cross(U, g)
+    alpha = solve_alpha(G, c, SolveConfig(beta=beta, ridge=1e-10))
+    res = gram_residual(G, c, alpha, beta)
+    assert float(jnp.linalg.norm(res)) < 1e-3 * float(jnp.linalg.norm(c) + 1)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_theorem1_definite_loss_reduction(seed):
+    """f(w^t) − f(w^{t+1}) ≥ (β/2)‖Σα_kΔ_k‖² on β-smooth quadratics."""
+    key = jax.random.PRNGKey(seed)
+    f, beta = _quadratic(key, 120)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (120,))
+    g = jax.grad(f)(w)
+    U = -0.03 * (g[None] + jax.random.normal(jax.random.fold_in(key, 2), (8, 120)))
+    G, c = gram_and_cross(U, g)
+    alpha = solve_alpha(G, c, SolveConfig(beta=beta))
+    reduction = f(w) - f(w + U.T @ alpha)
+    promised = theorem1_reduction(G, alpha, beta)
+    assert reduction >= promised - 1e-4 * abs(promised)
+    assert promised > 0
+
+
+def test_contextual_beats_fedavg_on_bound():
+    """α* minimises g(α): no other aggregation (incl. uniform) has a lower
+    context-dependent bound."""
+    key = jax.random.PRNGKey(7)
+    f, beta = _quadratic(key, 150)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (150,))
+    g = jax.grad(f)(w)
+    U = -0.05 * (g[None] + 0.7 * jax.random.normal(jax.random.fold_in(key, 2),
+                                                   (10, 150)))
+    G, c = gram_and_cross(U, g)
+    alpha = solve_alpha(G, c, SolveConfig(beta=beta, ridge=1e-10))
+    g_opt = bound_value(G, c, alpha, beta)
+    uniform = jnp.full((10,), 0.1)
+    assert g_opt <= bound_value(G, c, uniform, beta) + 1e-5
+    for s in range(5):
+        rand = jax.random.normal(jax.random.PRNGKey(s), (10,)) * 0.2
+        assert g_opt <= bound_value(G, c, rand, beta) + 1e-5
+
+
+def test_projection_interpretation():
+    """Σα_kΔ_k = −(1/β)·P_U∇f — the DESIGN.md §2 projected-gradient identity."""
+    key = jax.random.PRNGKey(3)
+    K, n, beta = 6, 80, 12.0
+    U = jax.random.normal(key, (K, n))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    G, c = gram_and_cross(U, g)
+    alpha = solve_alpha(G, c, SolveConfig(beta=beta, ridge=1e-12))
+    step = U.T @ alpha
+    # projector onto rowspace(U)
+    P = U.T @ jnp.linalg.solve(U @ U.T, U)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(-P @ g / beta),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_expected_bound_scaling():
+    """§III-C variant = contextual scaled by (N−1)/(K−1)."""
+    key = jax.random.PRNGKey(11)
+    K, n, N = 5, 40, 30
+    U = jax.random.normal(key, (K, n))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    G, c = gram_and_cross(U, g)
+    base = solve_alpha(G, c, SolveConfig(beta=8.0))
+    scaled = solve_alpha(G, c, SolveConfig(beta=8.0,
+                                           expectation_scale=(N - 1) / (K - 1)))
+    np.testing.assert_allclose(np.asarray(scaled),
+                               np.asarray(base) * (N - 1) / (K - 1), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(K=st.integers(2, 12), n=st.integers(16, 96),
+       chunk=st.sampled_from([16, 64, 128]), seed=st.integers(0, 2**16))
+def test_property_chunked_gram_equals_dense(K, n, chunk, seed):
+    """Streaming (chunked) gram == dense gram for any shape/chunking."""
+    key = jax.random.PRNGKey(seed)
+    U = jax.random.normal(key, (K, n))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    G1, c1 = gram_and_cross(U, g)
+    G2, c2 = gram_and_cross_chunked(U, g, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(G1), np.asarray(G2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(K=st.integers(2, 10), seed=st.integers(0, 2**16),
+       beta=st.floats(0.5, 50.0))
+def test_property_solve_minimises_bound(K, seed, beta):
+    """g(α*) ≤ g(α* + ε) for random perturbations — true minimiser."""
+    key = jax.random.PRNGKey(seed)
+    U = jax.random.normal(key, (K, 64))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (64,))
+    G, c = gram_and_cross(U, g)
+    alpha = solve_alpha(G, c, SolveConfig(beta=beta, ridge=1e-9))
+    g_star = float(bound_value(G, c, alpha, beta))
+    for s in range(4):
+        eps = jax.random.normal(jax.random.PRNGKey(s), (K,)) * 0.05
+        assert g_star <= float(bound_value(G, c, alpha + eps, beta)) + 1e-4
+
+
+def test_flatten_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    vec = tree_to_vector(tree)
+    back = vector_to_tree(vec, tree)
+    assert jax.tree_util.tree_structure(back) == jax.tree_util.tree_structure(tree)
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32))
+
+
+def test_aggregate_fedavg_equals_mean():
+    K = 4
+    params = {"w": jnp.zeros((3,))}
+    ups = {"w": jnp.arange(12, dtype=jnp.float32).reshape(K, 3)}
+    new, info = aggregate("fedavg")(params, ups, None, AggregatorConfig("fedavg"))
+    np.testing.assert_allclose(np.asarray(new["w"]),
+                               np.asarray(ups["w"].mean(0)))
+
+
+def test_aggregate_contextual_last_layer_scope():
+    """Gram scoped to the head, combine applied to the full update."""
+    key = jax.random.PRNGKey(0)
+    K = 6
+    params = {"hidden": {"w": jnp.zeros((8, 8))}, "head": {"w": jnp.zeros((8, 4))}}
+    ups = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(key, (K,) + p.shape) * 0.1, params)
+    grad = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.fold_in(key, 1), p.shape), params)
+    cfg = AggregatorConfig("contextual", solve=SolveConfig(beta=10.0),
+                           gram_scope="last_layer")
+    new, info = aggregate("contextual")(params, ups, grad, cfg)
+    assert info["alpha"].shape == (K,)
+    # hidden layer moved too (combine is full-scope)
+    assert float(jnp.abs(new["hidden"]["w"]).sum()) > 0

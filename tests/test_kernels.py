@@ -1,0 +1,139 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+with hypothesis shape/dtype sweeps (brief deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.combine import combine_pallas
+from repro.kernels.decode_attn import flash_decode_pallas
+from repro.kernels.gram import gram_pallas
+
+
+# ----------------------------------------------------------------- gram
+
+@settings(max_examples=15, deadline=None)
+@given(K=st.integers(1, 20), n=st.integers(1, 5000),
+       block=st.sampled_from([128, 512, 2048]),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       seed=st.integers(0, 2**16))
+def test_gram_kernel_sweep(K, n, block, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    U = (jax.random.normal(key, (K, n)) * 0.5).astype(dt)
+    g = (jax.random.normal(jax.random.fold_in(key, 1), (n,))).astype(dt)
+    G, c = gram_pallas(U, g, block_n=block, interpret=True)
+    Gr, cr = ref.gram_ref(U, g)
+    tol = 2e-2 if dtype == "bfloat16" else 1e-4
+    np.testing.assert_allclose(np.asarray(G), np.asarray(Gr), rtol=tol,
+                               atol=tol * max(1.0, float(jnp.abs(Gr).max())))
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), rtol=tol,
+                               atol=tol * max(1.0, float(jnp.abs(cr).max())))
+
+
+def test_gram_kernel_zero_padding_exact():
+    """Padding columns with zeros must not change the result."""
+    U = jnp.ones((3, 130))          # forces padding at block 128
+    g = jnp.ones((130,))
+    G, c = gram_pallas(U, g, block_n=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(G), np.full((3, 3), 130.0))
+    np.testing.assert_allclose(np.asarray(c), np.full((3,), 130.0))
+
+
+# --------------------------------------------------------------- combine
+
+@settings(max_examples=15, deadline=None)
+@given(K=st.integers(1, 16), n=st.integers(1, 4000),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       seed=st.integers(0, 2**16))
+def test_combine_kernel_sweep(K, n, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    U = (jax.random.normal(key, (K, n)) * 0.3).astype(dt)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (n,)).astype(dt)
+    a = jax.random.normal(jax.random.fold_in(key, 2), (K,)).astype(jnp.float32)
+    out = combine_pallas(w, U, a, block_n=512, interpret=True)
+    outr = ref.combine_ref(w, U, a)
+    tol = 3e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(outr, np.float32), rtol=tol, atol=tol)
+
+
+def test_combine_zero_alpha_identity():
+    w = jnp.arange(300, dtype=jnp.float32)
+    U = jnp.ones((4, 300))
+    out = combine_pallas(w, U, jnp.zeros((4,)), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w))
+
+
+# ------------------------------------------------------------ decode_attn
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 3), S=st.integers(8, 600),
+       KV=st.sampled_from([1, 2, 4]), G=st.sampled_from([1, 3, 8]),
+       block=st.sampled_from([128, 256]),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       seed=st.integers(0, 2**16))
+def test_flash_decode_sweep(B, S, KV, G, block, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    hd = 64
+    q = jax.random.normal(key, (B, KV, G, hd)).astype(dt)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd)).astype(dt)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd)).astype(dt)
+    lengths = jax.random.randint(jax.random.fold_in(key, 3), (B,), 1, S + 1)
+    o, lse = flash_decode_pallas(q, k, v, lengths, block_s=block,
+                                 interpret=True)
+    orf, lser = ref.flash_decode_ref(q, k, v, lengths)
+    tol = 3e-2 if dtype == "bfloat16" else 2e-4
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lser), rtol=tol,
+                               atol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64, 250])
+def test_flash_decode_window(window):
+    key = jax.random.PRNGKey(0)
+    B, S, KV, G, hd = 2, 300, 2, 4, 64
+    q = jax.random.normal(key, (B, KV, G, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    lengths = jnp.array([200, 300], jnp.int32)
+    o, lse = flash_decode_pallas(q, k, v, lengths, window=window,
+                                 block_s=128, interpret=True)
+    orf, lser = ref.flash_decode_ref(q, k, v, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-4,
+                               atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(parts=st.integers(2, 5), seed=st.integers(0, 2**16))
+def test_lse_merge_property(parts, seed):
+    """Sharded flash-decode + LSE merge == unsharded attention, for any
+    number of seq shards (the §Perf collective optimization's invariant)."""
+    key = jax.random.PRNGKey(seed)
+    B, KV, G, hd = 2, 2, 3, 32
+    S = 128 * parts
+    q = jax.random.normal(key, (B, KV, G, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    lengths = jnp.array([S - 37, S], jnp.int32)
+
+    os_, ls_ = [], []
+    shard = S // parts
+    for pidx in range(parts):
+        lo = pidx * shard
+        local_len = jnp.clip(lengths - lo, 0, shard)
+        o_p, l_p = ref.flash_decode_ref(q, k[:, lo:lo + shard],
+                                        v[:, lo:lo + shard], local_len)
+        os_.append(o_p)
+        ls_.append(l_p)
+    om, lm = ref.lse_merge_ref(jnp.stack(os_), jnp.stack(ls_))
+    ofull, lfull = ref.flash_decode_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(om), np.asarray(ofull), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(lfull), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,131 @@
+"""Launcher-layer unit tests: sharding rules, cohort mapping, ring placement,
+server momentum, analytic-roofline variant consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.analytic import analytic_roofline
+from repro.launch.mesh import make_host_mesh
+from repro.launch.shapes import INPUT_SHAPES, InputShape, arch_for_shape
+from repro.launch.steps import build_train_step, cohort_axes, num_cohorts
+from repro.models import get_model
+from repro.models.attention import ring_place
+from repro.sharding.specs import param_pspecs, spec_for_leaf
+
+
+def test_ring_place_short_and_long():
+    k = jnp.arange(2 * 10 * 1 * 4, dtype=jnp.float32).reshape(2, 10, 1, 4)
+    # short prompt: identity placement + zero pad
+    out = ring_place(k, 16)
+    np.testing.assert_allclose(np.asarray(out[:, :10]), np.asarray(k))
+    assert float(jnp.abs(out[:, 10:]).sum()) == 0.0
+    # long prompt: last W rows at position-mod-W slots
+    out = ring_place(k, 4)
+    for pos in range(6, 10):
+        np.testing.assert_allclose(np.asarray(out[:, pos % 4]),
+                                   np.asarray(k[:, pos]))
+
+
+def test_cohort_counting_modes():
+    mesh = make_host_mesh()          # (1, n_dev)
+    assert num_cohorts(mesh) == 1
+    assert num_cohorts(mesh, dp_only=True, batch=len(jax.devices())) == \
+        len(jax.devices())
+
+
+def test_spec_rules_divisibility_guard():
+    mesh = make_host_mesh()
+    # vocab not divisible by device count → replicated instead of invalid
+    spec = spec_for_leaf("embed", (51866, 1280), mesh, fsdp=False)
+    for axis, dim in zip(tuple(spec) + (None,) * 2, (51866, 1280)):
+        if axis is not None:
+            assert dim % mesh.shape[axis] == 0
+
+
+def test_param_pspecs_dp_mode_replicates():
+    cfg = get_config("rwkv6-1.6b").reduced()
+    bundle = get_model(cfg)
+    shapes = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    mesh = make_host_mesh()
+    specs = param_pspecs(cfg, shapes, mesh, mode="dp")
+    for s in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: hasattr(x, "index")):
+        pass  # PartitionSpec flattens to nothing; check via tree_map instead
+    flat = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: x is not None and not isinstance(x, dict))[0]
+    assert all(len(tuple(sp)) == 0 for sp in flat)
+
+
+def test_server_momentum_accumulates():
+    cfg = get_config("qwen3-14b").reduced().with_overrides(
+        num_layers=1, d_model=32, d_ff=64, vocab_size=64, num_heads=2,
+        num_kv_heads=2, head_dim=16)
+    bundle = get_model(cfg)
+    mesh = make_host_mesh()
+    shape = InputShape("t", "train", 16, 4)
+    step = build_train_step(cfg, mesh, shape, lr=0.05, remat=False,
+                            server_momentum=0.9)
+    params = bundle.init(jax.random.PRNGKey(0))
+    vel = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 64)
+    with mesh:
+        (p1, v1), m1 = jax.jit(step)((params, vel), {"tokens": tokens})
+        (p2, v2), m2 = jax.jit(step)((p1, v1), {"tokens": tokens})
+    v1n = sum(float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(v1))
+    v2n = sum(float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(v2))
+    assert v1n > 0 and v2n > 0
+    assert float(m2["loss"]) < float(m1["loss"]) + 1.0   # sane training
+
+
+def test_fedavg_vs_contextual_train_step_same_interface():
+    cfg = get_config("olmoe-1b-7b").reduced().with_overrides(
+        num_layers=1, d_model=32, d_ff=32, vocab_size=64, num_heads=2,
+        num_kv_heads=2, num_experts=4, experts_per_token=2)
+    bundle = get_model(cfg)
+    mesh = make_host_mesh()
+    shape = InputShape("t", "train", 16, 4)
+    params = bundle.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 64)
+    with mesh:
+        for agg in ("fedavg", "contextual"):
+            step = build_train_step(cfg, mesh, shape, aggregator=agg,
+                                    lr=0.05, remat=False)
+            new_p, metrics = jax.jit(step)(params, {"tokens": tokens})
+            assert np.isfinite(float(metrics["loss"]))
+
+
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_analytic_roofline_all_pairs_finite(shape_name):
+    from repro.configs import ASSIGNED
+    shape = INPUT_SHAPES[shape_name]
+    for arch in ASSIGNED:
+        cfg = arch_for_shape(get_config(arch), shape)
+        if cfg is None:
+            continue
+        r = analytic_roofline(cfg, shape)
+        assert r.compute_s > 0 and r.memory_s > 0 and r.coll_bytes >= 0
+        assert 0 < r.useful_ratio <= 1.2, (arch, shape_name, r.useful_ratio)
+
+
+def test_analytic_variants_directionality():
+    """dp_only must cut collectives; ring must cut decode memory; dots must
+    cut train compute — the §Perf lever signs."""
+    sh_t = INPUT_SHAPES["train_4k"]
+    cfg = get_config("zamba2-1.2b")
+    base = analytic_roofline(cfg, sh_t)
+    dp = analytic_roofline(cfg, sh_t, dp_only=True)
+    assert dp.collective_s < 0.2 * base.collective_s
+
+    sh_d = INPUT_SHAPES["long_500k"]
+    cham = arch_for_shape(get_config("chameleon-34b"), sh_d)
+    full = analytic_roofline(cham, sh_d, ring_kv=False)
+    ring = analytic_roofline(cham, sh_d, ring_kv=True)
+    assert ring.memory_s < 0.6 * full.memory_s
+
+    q = get_config("qwen2.5-32b")
+    fullr = analytic_roofline(q, sh_t, remat="full")
+    dots = analytic_roofline(q, sh_t, remat="dots")
+    assert dots.compute_s < fullr.compute_s
