@@ -1,0 +1,109 @@
+"""Async vs sync under increasing straggler severity (repro.edge workload).
+
+Sweeps the bimodal fleet's slowdown factor (how much slower the phone cohort
+is than the gateways) and reports virtual wall-clock to reach a target test
+accuracy for: sync FedAvg, sync contextual, async FedBuff, and async
+staleness-aware contextual.  The interesting trend: sync degrades linearly
+with the slowdown (the straggler gates every round) while async degrades
+only with the *average* device speed.
+
+Emits ``name,us_per_call,derived`` rows like every other benchmark module;
+``collect()`` returns a JSON-ready dict for ``run.py --json``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.edge import AsyncConfig, bimodal_fleet
+from repro.edge.wallclock import (model_flops_per_step, model_payload_bytes,
+                                  sync_wallclock_curve)
+from repro.fl import ServerConfig, run_async_simulation, run_simulation
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.models.logistic import logistic_apply, logistic_loss
+
+from .common import dataset, emit
+
+TARGET_ACC = 0.5
+SLOWDOWNS = (1.0, 4.0, 16.0)
+SEED = 42
+
+
+def _setup():
+    ds = dataset("synthetic_1_1")
+    params = get_model(ArchConfig(name="lr", family="logreg",
+                                  input_dim=ds.x.shape[-1],
+                                  num_classes=ds.num_classes)
+                       ).init(jax.random.PRNGKey(0))
+    return ds, params
+
+
+def _curves(ds, params, slowdown: float, rounds: int, aggs: int,
+            eval_every: int = 2) -> Dict[str, object]:
+    n = ds.num_devices
+    fleet = bimodal_fleet(n, slowdown=slowdown, dropout_slow=0.1, seed=0)
+    fps = model_flops_per_step(params, 10)
+    pb = model_payload_bytes(params)
+    spe = max(ds.samples_per_device // 10, 1)
+
+    out = {}
+    for agg in ("fedavg", "contextual"):
+        cfg = ServerConfig(aggregator=agg, num_devices=n, clients_per_round=10,
+                           lr=0.2, batch_size=10, min_epochs=1, max_epochs=20)
+        r = run_simulation(f"{agg}-sync", logistic_loss, logistic_apply,
+                           params, ds, cfg, num_rounds=rounds,
+                           selection_seed=SEED, eval_every=eval_every)
+        out[f"{agg}-sync"] = sync_wallclock_curve(
+            r, fleet, cfg, spe, rounds, eval_every, fps, pb,
+            selection_seed=SEED)
+
+    async_common = dict(num_devices=n, buffer_size=5, concurrency=10, lr=0.2,
+                        batch_size=10, min_epochs=1, max_epochs=20,
+                        staleness_mode="poly", staleness_decay=0.5)
+    for name, cfg in (
+            ("contextual-async", AsyncConfig(aggregator="contextual_async",
+                                             **async_common)),
+            ("fedbuff-async", AsyncConfig(aggregator="fedbuff", server_lr=0.5,
+                                          **async_common))):
+        r = run_async_simulation(name, logistic_loss, logistic_apply, params,
+                                 ds, cfg, fleet, num_aggregations=aggs,
+                                 selection_seed=SEED, eval_every=eval_every)
+        out[name] = r.to_curve()
+    return out
+
+
+def collect(rounds: int = 30, aggs: int = 30) -> Dict[str, List[dict]]:
+    """Run the sweep and return JSON-ready records (also used by --json)."""
+    ds, params = _setup()
+    records = []
+    for slowdown in SLOWDOWNS:
+        curves = _curves(ds, params, slowdown, rounds, aggs)
+        for name, c in curves.items():
+            t2a = c.time_to_accuracy(TARGET_ACC)
+            records.append({
+                "fleet_slowdown": slowdown,
+                "method": name,
+                "target_acc": TARGET_ACC,
+                "virtual_time_to_target_s": t2a,
+                "virtual_time_end_s": c.times[-1],
+                "best_acc": float(max(c.test_acc)),
+                "final_loss": float(c.train_loss[-1]),
+            })
+    return {"benchmark": "async_vs_sync", "target_acc": TARGET_ACC,
+            "records": records}
+
+
+def run(rounds: int = 30, aggs: int = 30) -> Dict[str, List[dict]]:
+    results = collect(rounds, aggs)
+    for rec in results["records"]:
+        t2a = rec["virtual_time_to_target_s"]
+        derived = (f"slowdown=x{rec['fleet_slowdown']:g};"
+                   f"t2a{int(TARGET_ACC * 100)}="
+                   f"{'%.4fs' % t2a if t2a is not None else 'never'};"
+                   f"best_acc={rec['best_acc']:.3f}")
+        emit(f"async_vs_sync/x{rec['fleet_slowdown']:g}/{rec['method']}",
+             (t2a or rec["virtual_time_end_s"]) * 1e6, derived)
+    return results

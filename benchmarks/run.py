@@ -4,12 +4,16 @@
   fig4_5  — algorithm comparison: FedAvg/FedProx/FOLB vs contextual (Figs. 4-5)
   fig6    — rounds-to-accuracy across the four datasets (Fig. 6)
   fig7    — aggregation-variable (α) statistics per stage (Fig. 7)
+  async   — async edge runtime vs sync under straggler severity sweep
   kernels — Pallas hot-spot micro-benchmarks
   roofline— per-(arch × shape × mesh) roofline terms from the dry-run
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks round counts.
+``--json`` additionally writes the async sweep to ``BENCH_async.json`` so the
+perf trajectory accumulates across PRs.
 """
 import argparse
+import json
 import sys
 
 
@@ -17,12 +21,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2_3,fig4_5,fig6,fig7,"
-                         "kernels,roofline")
+                         "async,kernels,roofline")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="write machine-readable results (BENCH_async.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (fig2_3_k2_variants, fig4_5_algorithms,
+    from . import (async_vs_sync, fig2_3_k2_variants, fig4_5_algorithms,
                    fig6_rounds_to_accuracy, fig7_alpha_stages, kernel_bench,
                    roofline_report)
 
@@ -35,6 +41,16 @@ def main() -> None:
         fig6_rounds_to_accuracy.run(rounds=15 if args.quick else 50)
     if only is None or "fig7" in only:
         fig7_alpha_stages.run(rounds=10 if args.quick else 30)
+    if only is None or "async" in only:
+        async_results = async_vs_sync.run(rounds=12 if args.quick else 30,
+                                          aggs=12 if args.quick else 30)
+        if args.json:
+            with open("BENCH_async.json", "w") as f:
+                json.dump(async_results, f, indent=2)
+            print("wrote BENCH_async.json", file=sys.stderr)
+    elif args.json:
+        print("--json currently only records the 'async' section, which "
+              "--only excluded; no file written", file=sys.stderr)
     if only is None or "kernels" in only:
         kernel_bench.run()
     if only is None or "roofline" in only:

@@ -1,0 +1,109 @@
+"""Async edge FL demo: staleness-aware contextual aggregation vs sync FedAvg.
+
+Simulates a bimodal phone+gateway fleet (half the devices 10× slower and
+flakier) on the heterogeneous Synthetic(1,1) task.  Synchronous rounds are
+gated by their slowest participant; the async runtime keeps aggregating
+whatever arrives, discounting stale updates inside the contextual K×K solve.
+The table compares *virtual wall-clock* to reach accuracy targets — the only
+axis on which sync and async are commensurable.
+
+  PYTHONPATH=src python examples/edge_async.py     (< 60 s on CPU)
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.data import make_synthetic
+from repro.data.federated import FederatedDataset
+from repro.edge import AsyncConfig, bimodal_fleet
+from repro.edge.wallclock import (model_flops_per_step, model_payload_bytes,
+                                  sync_wallclock_curve)
+from repro.fl import ServerConfig, run_async_simulation, run_simulation
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.models.logistic import logistic_apply, logistic_loss
+
+DIM, N_DEV, SEED = 60, 30, 42
+ROUNDS, AGGS, EVAL_EVERY = 40, 40, 2
+TARGETS = (0.40, 0.50, 0.55)
+
+
+def fmt_time(t):
+    return f"{t * 1e3:9.2f} ms" if t is not None else f"{'—':>12s}"
+
+
+def main():
+    xs, ys = make_synthetic(1.0, 1.0, num_devices=N_DEV, samples_per_device=60,
+                            dim=DIM, seed=2)
+    ds = FederatedDataset(xs, ys, np.ones(ys.shape, np.float32),
+                          xs.reshape(-1, DIM)[:400], ys.reshape(-1)[:400], 10)
+    params = get_model(ArchConfig(name="logreg", family="logreg",
+                                  input_dim=DIM, num_classes=10)
+                       ).init(jax.random.PRNGKey(0))
+    fleet = bimodal_fleet(N_DEV, slowdown=10.0, dropout_slow=0.1, seed=0)
+    print(f"fleet — {fleet.describe()}")
+
+    fps = model_flops_per_step(params, 10)
+    pb = model_payload_bytes(params)
+    spe = max(ds.samples_per_device // 10, 1)
+    curves = {}
+
+    # -- synchronous baselines, converted to virtual wall-clock -------------
+    for agg in ("fedavg", "contextual"):
+        cfg = ServerConfig(aggregator=agg, num_devices=N_DEV,
+                           clients_per_round=10, lr=0.2, batch_size=10,
+                           min_epochs=1, max_epochs=20)
+        r = run_simulation(f"{agg}-sync", logistic_loss, logistic_apply,
+                           params, ds, cfg, num_rounds=ROUNDS,
+                           selection_seed=SEED, eval_every=EVAL_EVERY)
+        curves[f"{agg}-sync"] = sync_wallclock_curve(
+            r, fleet, cfg, spe, ROUNDS, EVAL_EVERY, fps, pb,
+            selection_seed=SEED)
+
+    # -- async runtimes -----------------------------------------------------
+    async_cfgs = {
+        "contextual-async": AsyncConfig(
+            aggregator="contextual_async", num_devices=N_DEV, buffer_size=5,
+            concurrency=10, lr=0.2, batch_size=10, min_epochs=1,
+            max_epochs=20, staleness_mode="poly", staleness_decay=0.5),
+        "fedbuff-async": AsyncConfig(
+            aggregator="fedbuff", num_devices=N_DEV, buffer_size=5,
+            concurrency=10, server_lr=0.5, lr=0.2, batch_size=10,
+            min_epochs=1, max_epochs=20, staleness_mode="poly",
+            staleness_decay=0.5),
+    }
+    for name, cfg in async_cfgs.items():
+        r = run_async_simulation(name, logistic_loss, logistic_apply, params,
+                                 ds, cfg, fleet, num_aggregations=AGGS,
+                                 selection_seed=SEED, eval_every=EVAL_EVERY)
+        curves[name] = r.to_curve()
+        print(f"{name}: {r.arrived} arrivals, {r.dropped} dropouts, "
+              f"mean staleness {np.mean(r.staleness_mean):.2f} versions")
+
+    # -- the comparison table ------------------------------------------------
+    header = "virtual wall-clock to reach test accuracy"
+    print(f"\n{header}\n{'-' * len(header)}")
+    cols = "".join(f"  acc>={t:.2f}  " for t in TARGETS)
+    print(f"{'method':<18s}{cols}  final acc")
+    for name, c in curves.items():
+        row = "".join(f"{fmt_time(c.time_to_accuracy(t))} " for t in TARGETS)
+        print(f"{name:<18s}{row}     {max(c.test_acc):.3f}")
+
+    t_async = curves["contextual-async"].time_to_accuracy(TARGETS[-1])
+    t_sync = curves["fedavg-sync"].time_to_accuracy(TARGETS[-1])
+    if t_async is not None and (t_sync is None or t_async < t_sync):
+        speedup = (f"{t_sync / t_async:.1f}x faster than sync FedAvg"
+                   if t_sync else "sync FedAvg never got there")
+        print(f"\ncontextual-async reached acc {TARGETS[-1]:.2f} in "
+              f"{t_async * 1e3:.2f} ms of virtual time — {speedup}.\n"
+              "Stragglers no longer gate progress; staleness discounting in\n"
+              "the contextual solve keeps the late updates from derailing it.")
+    else:
+        print("\nWARNING: contextual-async did not beat sync FedAvg on this "
+              "seed — inspect the table above.")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,8 @@ Public API:
 """
 from .aggregation import (AggregatorConfig, aggregate, aggregate_contextual,
                           aggregate_contextual_expected, aggregate_fedavg,
-                          aggregate_folb, available_aggregators)
+                          aggregate_folb, available_aggregators,
+                          register_aggregator)
 from .distributed import (contextual_combine_sharded,
                           hierarchical_contextual_combine, sharded_combine,
                           sharded_gram_cross)
@@ -23,7 +24,8 @@ from .solve import (SolveConfig, bound_value, solve_alpha, solve_alpha_simple,
 __all__ = [
     "AggregatorConfig", "aggregate", "aggregate_contextual",
     "aggregate_contextual_expected", "aggregate_fedavg", "aggregate_folb",
-    "available_aggregators", "contextual_combine_sharded",
+    "available_aggregators", "register_aggregator",
+    "contextual_combine_sharded",
     "hierarchical_contextual_combine", "sharded_combine", "sharded_gram_cross",
     "scope_vector", "select_scope", "stacked_weighted_sum", "tree_add",
     "tree_scale", "tree_size", "tree_sub", "tree_to_vector",

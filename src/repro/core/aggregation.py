@@ -20,7 +20,7 @@ ignores it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -43,6 +43,9 @@ class AggregatorConfig:
     gram_scope: Optional[str] = None
     # client weights p_k = |D_k|/|D| for the weighted baseline
     client_weights: Optional[jax.Array] = None
+    # per-update staleness discounts s_k ∈ (0, 1], set by the async runtime
+    # (repro.edge): damps Gram cross-terms / effective weights of old updates
+    staleness: Optional[jax.Array] = None
 
 
 def _stacked_to_matrix(stacked: Pytree, scope: Optional[str]) -> jax.Array:
@@ -116,11 +119,8 @@ def aggregate_contextual_expected(params: Pytree, stacked_updates: Pytree,
     K = _num_clients(stacked_updates)
     N = pool_size if pool_size is not None else K
     scale = (N - 1) / max(K - 1, 1)
-    solve_cfg = SolveConfig(beta=cfg.solve.beta, ridge=cfg.solve.ridge,
-                            method=cfg.solve.method, expectation_scale=scale,
-                            clip_norm=cfg.solve.clip_norm)
-    cfg2 = AggregatorConfig(name="contextual", solve=solve_cfg,
-                            gram_scope=cfg.gram_scope)
+    cfg2 = replace(cfg, name="contextual",
+                   solve=replace(cfg.solve, expectation_scale=scale))
     return aggregate_contextual(params, stacked_updates, grad_tree, cfg2)
 
 
@@ -132,6 +132,15 @@ _REGISTRY: Dict[str, Callable] = {
     "contextual": aggregate_contextual,
     "contextual_expected": aggregate_contextual_expected,
 }
+
+
+def register_aggregator(name: str, fn: Callable, *,
+                        overwrite: bool = False) -> None:
+    """Register an aggregation strategy under ``name`` (used by subsystems
+    like ``repro.edge`` to plug in async variants without core knowing them)."""
+    if name in _REGISTRY and not overwrite:
+        raise KeyError(f"aggregator '{name}' already registered")
+    _REGISTRY[name] = fn
 
 
 def aggregate(name: str) -> Callable:

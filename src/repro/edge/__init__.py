@@ -1,0 +1,32 @@
+"""Async edge runtime: event-driven device simulation + staleness-aware
+contextual aggregation.
+
+Submodules:
+  * profiles     — per-device compute/network/dropout profiles + canonical
+                   fleets (uniform / bimodal phone+gateway / long-tail)
+  * events       — deterministic heap-of-events virtual-time scheduler
+  * async_server — buffered async aggregation (contextual_async / fedbuff /
+                   fedasync, registered in ``core.aggregation``)
+  * wallclock    — rounds-to-accuracy → virtual-time-to-accuracy conversion
+
+The entry point is :func:`repro.fl.run_async_simulation`, which drives these
+against the same datasets/metrics as the synchronous path.
+"""
+from .async_server import (AsyncBuffer, AsyncConfig, BufferedUpdate,
+                           aggregate_contextual_async, aggregate_fedbuff,
+                           staleness_weight)
+from .events import Event, EventKind, EventScheduler, SchedulerStats
+from .profiles import (DeviceProfile, Fleet, bimodal_fleet, get_fleet,
+                       longtail_fleet, uniform_fleet)
+from .wallclock import (WallclockCurve, model_flops_per_step,
+                        model_payload_bytes, sync_round_durations,
+                        sync_wallclock_curve)
+
+__all__ = [
+    "AsyncBuffer", "AsyncConfig", "BufferedUpdate",
+    "aggregate_contextual_async", "aggregate_fedbuff", "staleness_weight",
+    "Event", "EventKind", "EventScheduler", "SchedulerStats",
+    "DeviceProfile", "Fleet", "bimodal_fleet", "get_fleet", "longtail_fleet",
+    "uniform_fleet", "WallclockCurve", "model_flops_per_step",
+    "model_payload_bytes", "sync_round_durations", "sync_wallclock_curve",
+]

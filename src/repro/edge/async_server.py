@@ -1,0 +1,228 @@
+"""Buffered asynchronous aggregation with staleness-aware contextual solve.
+
+In the async runtime updates arrive one at a time, each computed against the
+model version the device was *dispatched* with.  The server buffers arrivals
+and aggregates whenever ``buffer_size`` updates are present.  Staleness
+τ_k = (current model version) − (dispatch version) is discounted by a weight
+s_k = s(τ_k) ∈ (0, 1]:
+
+  * ``contextual_async`` — the paper's K×K contextual solve over the buffer
+    under a shrink-to-noise staleness model: a τ-stale update is treated as
+    Δ̃_k with mean s_k·Δ_k and uncorrelated residual energy (1−s_k²)·‖Δ_k‖²
+    (total energy preserved).  The *expected* context-dependent bound then
+    has staleness-discounted Gram cross-terms
+
+        E⟨Δ̃_j, Δ̃_k⟩ = s_j s_k G_jk (j≠k),   E‖Δ̃_k‖² = G_kk,
+        E⟨Δ̃_k, ∇f⟩ = s_k c_k,
+
+    and its stationary α is applied to the raw buffered updates.  Stale
+    updates keep full self-energy but lose credited alignment, so their α
+    is damped toward 0 as s_k → 0; with s ≡ 1 this is *exactly*
+    ``contextual`` (tested) — the sync algorithm is the zero-staleness
+    special case.
+  * ``fedbuff``  — FedBuff-style baseline: w ← w + (1/M) Σ_k s_k Δ_k
+    (the server mixing rate η is folded into s by the runtime).
+  * ``fedasync`` — FedAsync is the M=1 special case of the same rule; it is
+    registered separately so configs read naturally.
+
+All three are registered in the existing ``core.aggregation`` registry and
+share its calling convention, so they also work from the synchronous round
+path if given an ``AggregatorConfig.staleness`` vector.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.aggregation import (AggregatorConfig, _num_clients,
+                                _stacked_to_matrix, aggregate,
+                                register_aggregator)
+from ..core.flatten import scope_vector, stacked_weighted_sum, tree_add
+from ..core.gram import gram_and_cross, gram_residual
+from ..core.solve import SolveConfig, bound_value, solve_alpha, theorem1_reduction
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# staleness discounting
+# ---------------------------------------------------------------------------
+
+def staleness_weight(tau: float, mode: str = "poly",
+                     decay: float = 0.5) -> float:
+    """s(τ) ∈ (0, 1]: monotone non-increasing discount of a τ-versions-old
+    update.  ``poly``: (1+τ)^(−a) (FedAsync's polynomial family), ``exp``:
+    e^(−aτ), ``const``: 1 (no discounting)."""
+    tau = max(float(tau), 0.0)
+    if mode == "const":
+        return 1.0
+    if mode == "exp":
+        return math.exp(-decay * tau)
+    if mode == "poly":
+        return (1.0 + tau) ** (-decay)
+    raise KeyError(f"unknown staleness mode '{mode}' (poly|exp|const)")
+
+
+# ---------------------------------------------------------------------------
+# aggregators (registered into core.aggregation)
+# ---------------------------------------------------------------------------
+
+def _staleness_or_ones(stacked: Pytree, cfg: AggregatorConfig) -> jax.Array:
+    K = _num_clients(stacked)
+    if cfg.staleness is None:
+        return jnp.ones((K,), jnp.float32)
+    return jnp.asarray(cfg.staleness, jnp.float32)
+
+
+def aggregate_contextual_async(params: Pytree, stacked_updates: Pytree,
+                               grad_tree: Pytree, cfg: AggregatorConfig
+                               ) -> Tuple[Pytree, Dict[str, jax.Array]]:
+    """Contextual K×K solve with staleness-discounted Gram cross-terms.
+
+    NB the diagonal must stay at full energy: discounting the whole Gram as
+    S·G·S and re-scaling α by s cancels exactly for invertible G (the solve
+    absorbs any row/column scaling), i.e. would make staleness a no-op.
+    Keeping E‖Δ̃_k‖² = G_kk while crediting only s_k of the alignment is what
+    actually shrinks a stale update's α."""
+    s = _staleness_or_ones(stacked_updates, cfg)
+    U = _stacked_to_matrix(stacked_updates, cfg.gram_scope)
+    g = scope_vector(grad_tree, cfg.gram_scope)
+    G, c = gram_and_cross(U, g)
+    d = jnp.diag(G)
+    Gd = G * jnp.outer(s, s) + jnp.diag(d * (1.0 - s * s))
+    cd = c * s
+    alpha = solve_alpha(Gd, cd, cfg.solve)
+    new = tree_add(params, stacked_weighted_sum(stacked_updates, alpha))
+    beta = cfg.solve.beta
+    info = {
+        "alpha": alpha,
+        "staleness_weight": s,
+        "bound": bound_value(Gd, cd, alpha, beta),
+        "theorem1_reduction": theorem1_reduction(Gd, alpha, beta),
+        "stationarity_residual": jnp.linalg.norm(
+            gram_residual(Gd, cd, alpha, beta)),
+        "gram_diag": d,
+    }
+    return new, info
+
+
+def aggregate_fedbuff(params: Pytree, stacked_updates: Pytree,
+                      grad_tree: Optional[Pytree], cfg: AggregatorConfig
+                      ) -> Tuple[Pytree, Dict[str, jax.Array]]:
+    """FedBuff: uniform mean of staleness-discounted buffered updates.
+    FedAsync is this with a single-update buffer."""
+    s = _staleness_or_ones(stacked_updates, cfg)
+    w = s / s.shape[0]
+    new = tree_add(params, stacked_weighted_sum(stacked_updates, w))
+    return new, {"alpha": w, "staleness_weight": s}
+
+
+register_aggregator("contextual_async", aggregate_contextual_async)
+register_aggregator("fedbuff", aggregate_fedbuff)
+register_aggregator("fedasync", aggregate_fedbuff)
+
+
+# ---------------------------------------------------------------------------
+# async server config + update buffer
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """Configuration of the asynchronous edge server (mirrors the sync
+    :class:`repro.fl.server.ServerConfig` where the concepts coincide)."""
+    aggregator: str = "contextual_async"  # contextual_async | fedbuff | fedasync
+    num_devices: int = 30                 # N
+    buffer_size: int = 5                  # M updates per aggregation
+    concurrency: Optional[int] = None     # in-flight cap (None → all devices)
+    lr: float = 0.03                      # client learning rate l
+    server_lr: float = 1.0                # η for fedasync/fedbuff mixing
+    beta: Optional[float] = None          # None → paper's β = 1/l
+    mu: float = 0.0                       # FedProx proximal coefficient
+    batch_size: int = 32
+    min_epochs: int = 1                   # per-dispatch epoch draw ~ U[min,max]
+    max_epochs: int = 20
+    gram_scope: Optional[str] = None
+    ridge: float = 1e-6
+    staleness_mode: str = "poly"          # poly | exp | const
+    staleness_decay: float = 0.5
+
+    def __post_init__(self):
+        if self.aggregator == "fedasync" and self.buffer_size != 1:
+            raise ValueError("fedasync aggregates every arrival; set "
+                             f"buffer_size=1 (got {self.buffer_size})")
+        if self.buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {self.buffer_size}")
+        if self.concurrency is not None and self.concurrency < 1:
+            raise ValueError("concurrency must be >= 1 (or None for one task "
+                             f"per device), got {self.concurrency}")
+
+    @property
+    def smoothness(self) -> float:
+        return self.beta if self.beta is not None else 1.0 / self.lr
+
+    def weight(self, tau: float) -> float:
+        return staleness_weight(tau, self.staleness_mode, self.staleness_decay)
+
+
+@dataclass
+class BufferedUpdate:
+    delta: Pytree          # w_k(after local steps) − w(dispatch version)
+    grad: Pytree           # ∇F_k at the dispatch params (K₂=0-style estimate)
+    dispatch_version: int
+    device_id: int
+
+
+class AsyncBuffer:
+    """Holds arrived updates and flushes them through the configured
+    aggregator once ``cfg.buffer_size`` are present."""
+
+    def __init__(self, cfg: AsyncConfig):
+        self.cfg = cfg
+        self.items: List[BufferedUpdate] = []
+        self.agg_fn = aggregate(cfg.aggregator)
+        self.base_cfg = AggregatorConfig(
+            name=cfg.aggregator,
+            solve=SolveConfig(beta=cfg.smoothness, ridge=cfg.ridge),
+            gram_scope=cfg.gram_scope)
+
+    def add(self, update: BufferedUpdate) -> None:
+        self.items.append(update)
+
+    def ready(self) -> bool:
+        return len(self.items) >= self.cfg.buffer_size
+
+    def flush(self, params: Pytree, current_version: int
+              ) -> Tuple[Pytree, Dict[str, Any]]:
+        """Aggregate the buffered updates into ``params`` and clear."""
+        assert self.items, "flush() on an empty buffer"
+        taus = np.array([current_version - u.dispatch_version
+                         for u in self.items], np.float32)
+        s = np.array([self.cfg.weight(t) for t in taus], np.float32)
+        # the server mixing rate η rides along in the aggregator's effective
+        # weights (fedbuff/fedasync only); s itself stays the documented
+        # s(τ) ∈ (0, 1] in the info dict below
+        s_eff = (s * self.cfg.server_lr
+                 if self.cfg.aggregator in ("fedbuff", "fedasync") else s)
+
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[u.delta for u in self.items])
+        # ∇f estimate: staleness-weighted mean of the buffered local gradients
+        # (fresher gradients better represent ∇f at the current iterate).
+        gw = s / max(float(s.sum()), 1e-12)
+        grad_est = jax.tree_util.tree_map(
+            lambda *gs: sum(w * g for w, g in zip(gw, gs)),
+            *[u.grad for u in self.items])
+
+        agg_cfg = replace(self.base_cfg, staleness=jnp.asarray(s_eff))
+        new_params, info = self.agg_fn(params, stacked, grad_est, agg_cfg)
+        info = dict(info)
+        info["staleness_weight"] = jnp.asarray(s)
+        info["staleness"] = taus
+        info["device_ids"] = np.array([u.device_id for u in self.items])
+        self.items = []
+        return new_params, info

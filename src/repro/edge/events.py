@@ -1,0 +1,121 @@
+"""Deterministic event-driven scheduler for the async edge runtime.
+
+The scheduler owns a virtual clock and a binary heap of pending events.  It
+knows nothing about models or aggregation — it turns *dispatches* (server
+hands a device a training task at virtual time t) into timed *arrivals*
+(the update reaches the server) or *dropouts* (the device dies mid-task),
+using each device's :class:`~repro.edge.profiles.DeviceProfile`.
+
+Determinism contract (tested by ``tests/test_edge_runtime.py``):
+
+  * all randomness (duration jitter, dropout coin flips, epoch draws) comes
+    from one ``np.random.RandomState(seed)``, consumed in dispatch order;
+  * heap ties at equal virtual time break on a monotone sequence number, so
+    event order is a pure function of (fleet, seed, dispatch sequence);
+  * every dispatch produces exactly one terminal event (ARRIVAL xor DROPOUT):
+    updates are never lost or duplicated, only late.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from enum import IntEnum
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .profiles import Fleet
+
+
+class EventKind(IntEnum):
+    DISPATCH = 0   # recorded in the trace when the server hands out a task
+    ARRIVAL = 1    # the device's update reaches the server
+    DROPOUT = 2    # the device died mid-task; its work is lost
+
+
+@dataclass(frozen=True)
+class Event:
+    time: float
+    seq: int                 # monotone tie-breaker; also a unique task id
+    kind: EventKind
+    device_id: int
+    # metadata the runtime attached at dispatch (step budget, model version …)
+    num_steps: int = 0
+    version: int = 0
+
+
+@dataclass
+class SchedulerStats:
+    dispatched: int = 0
+    arrived: int = 0
+    dropped: int = 0
+
+
+class EventScheduler:
+    """Heap-of-events virtual-time simulator over a device fleet."""
+
+    def __init__(self, fleet: Fleet, seed: int, flops_per_step: float,
+                 payload_bytes: float):
+        self.fleet = fleet
+        self.rng = np.random.RandomState(seed)
+        self.flops_per_step = float(flops_per_step)
+        self.payload_bytes = float(payload_bytes)
+        self.now = 0.0
+        self.stats = SchedulerStats()
+        self.trace: List[Event] = []      # full event log (tests, debugging)
+        self._heap: List[Event] = []
+        self._seq = itertools.count()
+
+    # -- dispatch ----------------------------------------------------------
+    def dispatch(self, device_id: int, num_steps: int, version: int) -> Event:
+        """Hand ``device_id`` a task of ``num_steps`` local steps at the
+        current virtual time; schedules its terminal ARRIVAL/DROPOUT event."""
+        prof = self.fleet[device_id]
+        seq = next(self._seq)
+        disp = Event(self.now, seq, EventKind.DISPATCH, device_id,
+                     num_steps=num_steps, version=version)
+        self.trace.append(disp)
+        self.stats.dispatched += 1
+
+        duration = prof.task_time(num_steps * self.flops_per_step,
+                                  self.payload_bytes, self.rng)
+        drops = self.rng.random_sample() < prof.dropout
+        if drops:
+            # die uniformly somewhere inside the task
+            duration *= float(self.rng.uniform(0.05, 0.95))
+            kind = EventKind.DROPOUT
+        else:
+            kind = EventKind.ARRIVAL
+        evt = Event(self.now + duration, seq, kind, device_id,
+                    num_steps=num_steps, version=version)
+        heapq.heappush(self._heap, (evt.time, evt.seq, evt))
+        return evt
+
+    # -- event loop --------------------------------------------------------
+    def pending(self) -> int:
+        return len(self._heap)
+
+    def pop(self) -> Optional[Event]:
+        """Advance the clock to the next terminal event and return it."""
+        if not self._heap:
+            return None
+        _, _, evt = heapq.heappop(self._heap)
+        self.now = evt.time
+        self.trace.append(evt)
+        if evt.kind == EventKind.ARRIVAL:
+            self.stats.arrived += 1
+        else:
+            self.stats.dropped += 1
+        return evt
+
+    # -- invariants (cheap enough to assert in tests) ----------------------
+    def conservation_ok(self) -> bool:
+        """Every dispatch is in-flight xor terminal — nothing lost/duplicated."""
+        return (self.stats.dispatched
+                == self.stats.arrived + self.stats.dropped + self.pending())
+
+    def trace_signature(self) -> List[tuple]:
+        """Hashable rendering of the full trace for determinism tests."""
+        return [(round(e.time, 9), e.seq, int(e.kind), e.device_id,
+                 e.num_steps, e.version) for e in self.trace]

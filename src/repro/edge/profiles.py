@@ -1,0 +1,144 @@
+"""Per-device compute/network profiles and canonical edge fleets.
+
+A :class:`DeviceProfile` captures the three axes of edge heterogeneity the
+paper's experiments abstract away (it draws epochs ~ U[min,max] inside a
+synchronous round):
+
+  * compute   — effective FLOP/s of the device,
+  * network   — uplink/downlink bandwidth in bytes/s,
+  * reliability — a per-task dropout probability (device dies / goes out of
+    coverage / user kills the app before the update is uploaded).
+
+``task_time`` turns a local-training workload (steps × FLOPs/step, model
+payload) into a virtual duration, with optional lognormal jitter drawn from a
+caller-provided RNG so the whole simulation stays deterministic under a seed.
+
+Canonical fleets (cf. Wang et al., adaptive FL at the edge):
+
+  * :func:`uniform_fleet`  — homogeneous devices (sanity baseline),
+  * :func:`bimodal_fleet`  — phones + gateways: a slow cohort ``slowdown``×
+    slower than the fast one, with its own dropout rate,
+  * :func:`longtail_fleet` — Pareto-distributed compute, the "one straggler
+    dominates the round" regime.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    device_id: int
+    flops: float                 # effective FLOP/s
+    up_bw: float                 # uplink bytes/s
+    down_bw: float               # downlink bytes/s
+    dropout: float = 0.0         # per-task dropout probability in [0, 1)
+    jitter: float = 0.0          # lognormal sigma on the compute time
+
+    def __post_init__(self):
+        if not (0.0 <= self.dropout < 1.0):
+            raise ValueError(
+                f"device {self.device_id}: dropout must be in [0, 1), got "
+                f"{self.dropout} (1.0 would never complete a task)")
+
+    def compute_time(self, flops_required: float) -> float:
+        return flops_required / self.flops
+
+    def comm_time(self, payload_bytes: float) -> float:
+        """Model download + update upload for one task."""
+        return payload_bytes / self.down_bw + payload_bytes / self.up_bw
+
+    def task_time(self, flops_required: float, payload_bytes: float,
+                  rng: Optional[np.random.RandomState] = None) -> float:
+        """Virtual duration of one dispatch→arrival task on this device."""
+        t = self.compute_time(flops_required)
+        if rng is not None and self.jitter > 0.0:
+            t *= float(np.exp(rng.normal(0.0, self.jitter)))
+        return t + self.comm_time(payload_bytes)
+
+
+@dataclass(frozen=True)
+class Fleet:
+    name: str
+    profiles: Tuple[DeviceProfile, ...]
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.profiles)
+
+    def __getitem__(self, device_id: int) -> DeviceProfile:
+        return self.profiles[device_id]
+
+    def __iter__(self) -> Iterator[DeviceProfile]:
+        return iter(self.profiles)
+
+    def describe(self) -> str:
+        f = np.array([p.flops for p in self.profiles])
+        d = np.array([p.dropout for p in self.profiles])
+        return (f"{self.name}: N={self.num_devices} "
+                f"flops[min/med/max]={f.min():.2e}/{np.median(f):.2e}/"
+                f"{f.max():.2e} mean_dropout={d.mean():.3f}")
+
+
+# Reference magnitudes: a mid-range phone sustains ~1 GFLOP/s of useful
+# training throughput on ~10 Mbit/s uplink; gateways are ~an order faster.
+PHONE_FLOPS = 1e9
+PHONE_BW = 1.25e6
+
+
+def uniform_fleet(num_devices: int, flops: float = PHONE_FLOPS,
+                  bandwidth: float = PHONE_BW, dropout: float = 0.0,
+                  jitter: float = 0.05) -> Fleet:
+    """Homogeneous fleet — async should roughly tie sync here."""
+    return Fleet("uniform", tuple(
+        DeviceProfile(i, flops, bandwidth, bandwidth, dropout, jitter)
+        for i in range(num_devices)))
+
+
+def bimodal_fleet(num_devices: int, slow_frac: float = 0.5,
+                  slowdown: float = 10.0, fast_flops: float = 10 * PHONE_FLOPS,
+                  bandwidth: float = PHONE_BW, dropout_slow: float = 0.1,
+                  dropout_fast: float = 0.0, jitter: float = 0.1,
+                  seed: int = 0) -> Fleet:
+    """Phones + gateways: a ``slow_frac`` cohort is ``slowdown``× slower and
+    flakier.  Which devices are slow is a seeded draw so fleets are
+    reproducible but not index-correlated with data heterogeneity."""
+    rng = np.random.RandomState(seed)
+    slow_ids = set(rng.choice(num_devices, int(round(slow_frac * num_devices)),
+                              replace=False).tolist())
+    profiles = []
+    for i in range(num_devices):
+        if i in slow_ids:
+            profiles.append(DeviceProfile(i, fast_flops / slowdown,
+                                          bandwidth / 2, bandwidth / 2,
+                                          dropout_slow, jitter))
+        else:
+            profiles.append(DeviceProfile(i, fast_flops, bandwidth, bandwidth,
+                                          dropout_fast, jitter))
+    return Fleet(f"bimodal(x{slowdown:g})", tuple(profiles))
+
+
+def longtail_fleet(num_devices: int, shape: float = 1.5,
+                   median_flops: float = PHONE_FLOPS,
+                   bandwidth: float = PHONE_BW, dropout: float = 0.05,
+                   jitter: float = 0.1, seed: int = 0) -> Fleet:
+    """Pareto(shape)-distributed slowdowns: most devices are fine, a heavy
+    tail is arbitrarily slow (the regime where synchronous rounds collapse)."""
+    rng = np.random.RandomState(seed)
+    slowdowns = 1.0 + rng.pareto(shape, size=num_devices)
+    slowdowns /= np.median(slowdowns)  # median device = median_flops
+    return Fleet("longtail", tuple(
+        DeviceProfile(i, median_flops / max(s, 1e-3), bandwidth, bandwidth,
+                      dropout, jitter)
+        for i, s in enumerate(slowdowns)))
+
+
+def get_fleet(name: str, num_devices: int, **kw) -> Fleet:
+    builders = {"uniform": uniform_fleet, "bimodal": bimodal_fleet,
+                "longtail": longtail_fleet}
+    if name not in builders:
+        raise KeyError(f"unknown fleet '{name}'; have {sorted(builders)}")
+    return builders[name](num_devices, **kw)

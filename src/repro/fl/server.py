@@ -117,11 +117,24 @@ def build_round_fn(loss_fn: Callable, cfg: ServerConfig,
 def sample_round(rng: np.random.RandomState, cfg: ServerConfig,
                  steps_per_epoch: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Host-side per-round randomness: S_t, the K₂ gradient sample, and the
-    per-client local step budgets (epochs ~ U[min,max] × steps/epoch)."""
+    per-client local step budgets (epochs ~ U[min,max] × steps/epoch).
+
+    Both S_t and the K₂ sample are drawn WITHOUT replacement (a device
+    reports one gradient, duplicating it would silently bias the ∇f
+    estimate), so both K and K₂ must fit in N."""
+    if cfg.clients_per_round > cfg.num_devices:
+        raise ValueError(
+            f"clients_per_round={cfg.clients_per_round} exceeds "
+            f"num_devices={cfg.num_devices}; cannot select a round cohort")
+    if cfg.grad_sample > cfg.num_devices:
+        raise ValueError(
+            f"grad_sample={cfg.grad_sample} exceeds num_devices="
+            f"{cfg.num_devices}; the K₂ gradient sample is drawn without "
+            "replacement — use grad_sample <= num_devices (or 0 to reuse "
+            "the round's own first-step gradients)")
     sel = rng.choice(cfg.num_devices, size=cfg.clients_per_round, replace=False)
     k2 = max(cfg.grad_sample, 1)
-    grad_sel = rng.choice(cfg.num_devices, size=k2,
-                          replace=cfg.grad_sample > cfg.num_devices)
+    grad_sel = rng.choice(cfg.num_devices, size=k2, replace=False)
     epochs = rng.randint(cfg.min_epochs, cfg.max_epochs + 1,
                          size=cfg.clients_per_round)
     num_steps = (epochs * steps_per_epoch).astype(np.int32)

@@ -1,14 +1,23 @@
 """End-to-end FL simulation harness (reproduces the paper's experiments).
 
-Runs T rounds of a configured algorithm on a :class:`FederatedDataset`,
-keeping ALL host-side randomness (device selection, epoch heterogeneity)
-on a dedicated seed so different algorithms see *identical* selections —
-exactly the paper's §IV-A3 protocol.
+``run_simulation`` runs T synchronous rounds of a configured algorithm on a
+:class:`FederatedDataset`, keeping ALL host-side randomness (device
+selection, epoch heterogeneity) on a dedicated seed so different algorithms
+see *identical* selections — exactly the paper's §IV-A3 protocol.
+
+``run_async_simulation`` drives the same datasets/metrics through the
+``repro.edge`` event-driven runtime: devices train at profile-dependent
+speeds, updates arrive asynchronously, and the server aggregates buffered
+(possibly stale) updates.  Both paths share the eval/metrics code, and the
+async event stream is itself a pure function of (fleet, seed) — aggregation
+choices never perturb timing — so algorithms remain comparable.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -16,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..data.federated import FederatedDataset
+from .client import client_update
 from .metrics import evaluate_classifier, global_train_loss
 from .server import RoundState, ServerConfig, build_round_fn, init_server, sample_round
 
@@ -82,4 +92,144 @@ def run_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             result.test_acc.append(acc)
             result.test_nll.append(nll)
     result.wall_time = time.time() - t0
+    return result
+
+
+@dataclass
+class AsyncSimulationResult:
+    """Metrics of an async run, indexed by *virtual wall-clock* eval points."""
+    name: str
+    times: List[float] = field(default_factory=list)       # virtual seconds
+    versions: List[int] = field(default_factory=list)      # model version
+    train_loss: List[float] = field(default_factory=list)
+    test_acc: List[float] = field(default_factory=list)
+    test_nll: List[float] = field(default_factory=list)
+    staleness_mean: List[float] = field(default_factory=list)  # per flush
+    alpha_history: List[np.ndarray] = field(default_factory=list)
+    updates_per_device: Optional[np.ndarray] = None   # arrivals aggregated
+    dispatched: int = 0
+    arrived: int = 0
+    dropped: int = 0
+    wall_time: float = 0.0                                 # real seconds
+
+    def time_to_accuracy(self, level: float) -> Optional[float]:
+        """First virtual time at which test accuracy reaches ``level``."""
+        return self.to_curve().time_to_accuracy(level)
+
+    def to_curve(self):
+        from ..edge.wallclock import WallclockCurve
+        return WallclockCurve(name=self.name, times=list(self.times),
+                              test_acc=list(self.test_acc),
+                              train_loss=list(self.train_loss))
+
+
+def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
+                         init_params: Pytree, dataset: FederatedDataset,
+                         cfg, fleet, num_aggregations: int,
+                         selection_seed: int = 1234, eval_every: int = 1,
+                         collect_alpha: bool = False) -> AsyncSimulationResult:
+    """Event-driven async FL (``cfg`` is a :class:`repro.edge.AsyncConfig`).
+
+    The server keeps up to ``cfg.concurrency`` tasks in flight (default: one
+    per device); devices without a task wait in a FIFO queue, so a
+    concurrency cap rotates work across the whole fleet rather than pinning
+    it to a fixed subset.  Each ARRIVAL is trained against the params it was
+    *dispatched* with, buffered, and the buffer is flushed through the
+    configured aggregator (``contextual_async`` / ``fedbuff`` /
+    ``fedasync``) once ``cfg.buffer_size`` updates are present.  Dropouts
+    lose their work; the freed slot goes to the next waiting device.  Runs
+    until ``num_aggregations`` buffer flushes have been applied.
+    """
+    # Imported lazily: repro.edge imports repro.fl at module scope, so the
+    # reverse edge must not exist at import time.
+    from ..edge.async_server import AsyncBuffer, BufferedUpdate
+    from ..edge.events import EventKind, EventScheduler
+    from ..edge.wallclock import model_flops_per_step, model_payload_bytes
+
+    if fleet.num_devices != cfg.num_devices:
+        raise ValueError(f"fleet has {fleet.num_devices} devices, config "
+                         f"expects {cfg.num_devices}")
+    if dataset.num_devices < cfg.num_devices:
+        raise ValueError(f"dataset has {dataset.num_devices} device shards, "
+                         f"need {cfg.num_devices}")
+
+    steps_per_epoch = max(dataset.samples_per_device // cfg.batch_size, 1)
+    max_steps = cfg.max_epochs * steps_per_epoch
+    upd = jax.jit(partial(client_update, loss_fn, max_steps=max_steps,
+                          batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu))
+
+    params = jax.tree_util.tree_map(jnp.asarray, init_params)
+    x = jnp.asarray(dataset.x)
+    y = jnp.asarray(dataset.y)
+    mask = jnp.asarray(dataset.mask)
+    test_x, test_y = jnp.asarray(dataset.test_x), jnp.asarray(dataset.test_y)
+
+    scheduler = EventScheduler(
+        fleet, seed=selection_seed,
+        flops_per_step=model_flops_per_step(params, cfg.batch_size),
+        payload_bytes=model_payload_bytes(params))
+    buffer = AsyncBuffer(cfg)
+    epoch_rng = np.random.RandomState(selection_seed + 1)
+    base_key = jax.random.PRNGKey(selection_seed)
+
+    version = 0
+    in_flight: Dict[int, tuple] = {}     # device_id -> (params snapshot, version)
+    idle = deque(range(fleet.num_devices))   # devices waiting for a task
+
+    def dispatch_next() -> None:
+        device_id = idle.popleft()
+        epochs = int(epoch_rng.randint(cfg.min_epochs, cfg.max_epochs + 1))
+        scheduler.dispatch(device_id, epochs * steps_per_epoch, version)
+        in_flight[device_id] = (params, version)
+
+    concurrency = (fleet.num_devices if cfg.concurrency is None
+                   else min(cfg.concurrency, fleet.num_devices))
+    for _ in range(concurrency):
+        dispatch_next()
+
+    result = AsyncSimulationResult(
+        name=name, updates_per_device=np.zeros(fleet.num_devices, np.int64))
+    max_events = 1000 + 50 * num_aggregations * cfg.buffer_size
+    aggs = 0
+    events_processed = 0
+    t0 = time.time()
+    while aggs < num_aggregations:
+        if events_processed >= max_events:
+            raise RuntimeError(f"exceeded {max_events} events before reaching "
+                               f"{num_aggregations} aggregations")
+        events_processed += 1
+        evt = scheduler.pop()
+        if evt is None:
+            raise RuntimeError("event queue exhausted before reaching "
+                               f"{num_aggregations} aggregations")
+        disp_params, disp_version = in_flight.pop(evt.device_id)
+        idle.append(evt.device_id)      # back of the queue either way
+        if evt.kind == EventKind.DROPOUT:
+            dispatch_next()             # lost work; slot goes to next waiter
+            continue
+        key = jax.random.fold_in(base_key, evt.seq)
+        delta, grad = upd(disp_params, x[evt.device_id], y[evt.device_id],
+                          mask[evt.device_id], jnp.int32(evt.num_steps), key)
+        buffer.add(BufferedUpdate(delta, grad, disp_version, evt.device_id))
+        result.updates_per_device[evt.device_id] += 1
+        if buffer.ready():
+            params, info = buffer.flush(params, version)
+            version += 1
+            aggs += 1
+            result.staleness_mean.append(float(np.mean(info["staleness"])))
+            if collect_alpha and "alpha" in info:
+                result.alpha_history.append(np.asarray(info["alpha"]))
+            if aggs % eval_every == 0 or aggs == num_aggregations:
+                loss = global_train_loss(loss_fn, params, x, y, mask)
+                nll, acc = evaluate_classifier(apply_fn, params, test_x, test_y)
+                result.times.append(scheduler.now)
+                result.versions.append(version)
+                result.train_loss.append(loss)
+                result.test_acc.append(acc)
+                result.test_nll.append(nll)
+        dispatch_next()                 # fresh task on the freshest model
+    result.wall_time = time.time() - t0
+    result.dispatched = scheduler.stats.dispatched
+    result.arrived = scheduler.stats.arrived
+    result.dropped = scheduler.stats.dropped
     return result

@@ -1,0 +1,293 @@
+"""Tests for the async edge runtime (repro.edge): scheduler determinism,
+update conservation under dropout, staleness-weight bounds, aggregator
+equivalences, and the async simulation entry point."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AggregatorConfig, SolveConfig, aggregate
+from repro.data.federated import FederatedDataset
+from repro.edge import (AsyncConfig, EventKind, EventScheduler, bimodal_fleet,
+                        get_fleet, longtail_fleet, staleness_weight,
+                        uniform_fleet)
+from repro.edge.wallclock import (model_flops_per_step, model_payload_bytes,
+                                  sync_round_durations)
+from repro.fl import ServerConfig, run_async_simulation
+from repro.fl.server import sample_round
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.models.logistic import logistic_apply, logistic_loss
+
+import repro.edge.async_server  # noqa: F401  (registers async aggregators)
+
+
+# ---------------------------------------------------------------------------
+# fleets
+# ---------------------------------------------------------------------------
+
+def test_fleet_builders():
+    for fleet in (uniform_fleet(12), bimodal_fleet(12, seed=3),
+                  longtail_fleet(12, seed=3)):
+        assert fleet.num_devices == 12
+        for p in fleet:
+            assert p.flops > 0 and 0.0 <= p.dropout < 1.0
+            assert p.task_time(1e9, 1e6) > 0
+        assert "N=12" in fleet.describe()
+    assert get_fleet("bimodal", 8, seed=1).num_devices == 8
+    with pytest.raises(KeyError):
+        get_fleet("nope", 8)
+    with pytest.raises(ValueError):
+        uniform_fleet(4, dropout=1.0)   # would never complete a task
+
+
+# ---------------------------------------------------------------------------
+# event scheduler
+# ---------------------------------------------------------------------------
+
+def _drive(seed: int, num_events: int = 200, dropout: float = 0.3):
+    fleet = uniform_fleet(10, dropout=dropout, jitter=0.2)
+    sched = EventScheduler(fleet, seed=seed, flops_per_step=1e7,
+                           payload_bytes=1e5)
+    for dev in range(fleet.num_devices):
+        sched.dispatch(dev, num_steps=10 + dev, version=0)
+    arrivals = []
+    for i in range(num_events):
+        evt = sched.pop()
+        assert evt is not None
+        if evt.kind == EventKind.ARRIVAL:
+            arrivals.append(evt.seq)
+        sched.dispatch(evt.device_id, num_steps=10 + (i % 7), version=i)
+    return sched, arrivals
+
+
+def test_scheduler_determinism_under_fixed_seed():
+    s1, a1 = _drive(seed=7)
+    s2, a2 = _drive(seed=7)
+    assert s1.trace_signature() == s2.trace_signature()
+    assert a1 == a2
+    s3, _ = _drive(seed=8)
+    assert s1.trace_signature() != s3.trace_signature()
+
+
+def test_scheduler_clock_is_monotone():
+    sched, _ = _drive(seed=1)
+    times = [e.time for e in sched.trace]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    assert sched.now > 0.0
+
+
+def test_no_lost_or_duplicated_updates_under_dropout():
+    sched, arrivals = _drive(seed=3, dropout=0.4)
+    # conservation: every dispatch is in-flight xor terminal
+    assert sched.conservation_ok()
+    assert sched.stats.dropped > 0 and sched.stats.arrived > 0
+    # no duplicated arrivals: each task id (seq) arrives at most once
+    assert len(arrivals) == len(set(arrivals))
+    # every terminal event's seq matches exactly one dispatch in the trace
+    dispatched = {e.seq for e in sched.trace if e.kind == EventKind.DISPATCH}
+    terminal = [e.seq for e in sched.trace if e.kind != EventKind.DISPATCH]
+    assert len(terminal) == len(set(terminal))
+    assert set(terminal) <= dispatched
+
+
+# ---------------------------------------------------------------------------
+# staleness weights
+# ---------------------------------------------------------------------------
+
+def test_staleness_weights_in_unit_interval_and_monotone():
+    taus = np.arange(0, 50)
+    for mode in ("poly", "exp", "const"):
+        for decay in (0.1, 0.5, 2.0):
+            w = np.array([staleness_weight(t, mode, decay) for t in taus])
+            assert np.all(w > 0.0) and np.all(w <= 1.0)
+            assert np.all(np.diff(w) <= 1e-12)           # non-increasing
+            assert w[0] == pytest.approx(1.0)
+    with pytest.raises(KeyError):
+        staleness_weight(1.0, "bogus")
+
+
+# ---------------------------------------------------------------------------
+# async aggregators
+# ---------------------------------------------------------------------------
+
+def _toy_updates(key, K=6, dim=40):
+    k1, k2, k3 = jax.random.split(key, 3)
+    stacked = {"w": jax.random.normal(k1, (K, dim, 3)) * 0.1,
+               "b": jax.random.normal(k2, (K, 3)) * 0.1}
+    grad = {"w": jax.random.normal(k3, (dim, 3)) * 0.1,
+            "b": jnp.zeros((3,))}
+    params = {"w": jnp.zeros((dim, 3)), "b": jnp.zeros((3,))}
+    return params, stacked, grad
+
+
+def test_contextual_async_with_unit_staleness_equals_contextual():
+    params, stacked, grad = _toy_updates(jax.random.PRNGKey(0))
+    cfg = AggregatorConfig(name="x", solve=SolveConfig(beta=5.0))
+    new_a, info_a = aggregate("contextual_async")(params, stacked, grad, cfg)
+    new_c, info_c = aggregate("contextual")(params, stacked, grad, cfg)
+    np.testing.assert_allclose(np.asarray(new_a["w"]), np.asarray(new_c["w"]),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(info_a["alpha"]),
+                               np.asarray(info_c["alpha"]), rtol=1e-5,
+                               atol=1e-7)
+
+
+def test_contextual_async_staleness_damps_stale_updates():
+    params, stacked, grad = _toy_updates(jax.random.PRNGKey(1))
+    s = jnp.array([1.0, 1.0, 1.0, 0.01, 0.01, 0.01])
+    base = AggregatorConfig(name="x", solve=SolveConfig(beta=5.0))
+    _, info_fresh = aggregate("contextual_async")(params, stacked, grad, base)
+    from dataclasses import replace
+    _, info_stale = aggregate("contextual_async")(
+        params, stacked, grad, replace(base, staleness=s))
+    a_fresh = np.abs(np.asarray(info_fresh["alpha"]))
+    a_stale = np.abs(np.asarray(info_stale["alpha"]))
+    # heavily-discounted updates lose nearly all their weight vs the
+    # staleness-free solve; fresh updates keep comparable magnitude
+    assert np.all(a_stale[3:] < 0.1 * a_fresh[3:] + 1e-6)
+    assert a_stale[:3].mean() > 0.2 * a_fresh[:3].mean()
+
+
+def test_fedbuff_is_staleness_weighted_mean():
+    params, stacked, grad = _toy_updates(jax.random.PRNGKey(2))
+    s = jnp.array([1.0, 0.5, 0.25, 1.0, 0.5, 0.25])
+    cfg = AggregatorConfig(name="x", solve=SolveConfig(beta=5.0), staleness=s)
+    new, info = aggregate("fedbuff")(params, stacked, grad, cfg)
+    expect = np.einsum("k,kij->ij", np.asarray(s) / 6.0,
+                       np.asarray(stacked["w"]))
+    np.testing.assert_allclose(np.asarray(new["w"]), expect, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(info["staleness_weight"]),
+                               np.asarray(s))
+
+
+def test_expected_variant_with_pool_K_equals_contextual():
+    """(N−1)/(K−1) = 1 when the pool is the round itself — the expected-bound
+    solve must coincide with the contextual one (also exercises the
+    dataclasses.replace propagation of every solve field)."""
+    params, stacked, grad = _toy_updates(jax.random.PRNGKey(3))
+    cfg = AggregatorConfig(name="x", solve=SolveConfig(beta=5.0, ridge=1e-5),
+                           staleness=None)
+    new_e, _ = aggregate("contextual_expected")(params, stacked, grad, cfg,
+                                                pool_size=6)
+    new_c, _ = aggregate("contextual")(params, stacked, grad, cfg)
+    np.testing.assert_allclose(np.asarray(new_e["w"]), np.asarray(new_c["w"]),
+                               rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# sample_round validation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_sample_round_rejects_oversized_cohorts():
+    rng = np.random.RandomState(0)
+    with pytest.raises(ValueError, match="clients_per_round"):
+        sample_round(rng, ServerConfig(num_devices=5, clients_per_round=6), 4)
+    with pytest.raises(ValueError, match="grad_sample"):
+        sample_round(rng, ServerConfig(num_devices=5, clients_per_round=3,
+                                       grad_sample=9), 4)
+
+
+def test_sample_round_gradient_sample_has_no_duplicates():
+    rng = np.random.RandomState(0)
+    cfg = ServerConfig(num_devices=8, clients_per_round=4, grad_sample=8)
+    for _ in range(10):
+        _, grad_sel, _ = sample_round(rng, cfg, 4)
+        assert len(set(grad_sel.tolist())) == len(grad_sel) == 8
+
+
+# ---------------------------------------------------------------------------
+# async simulation end to end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_problem():
+    from repro.data import make_synthetic
+    dim, n_dev = 20, 10
+    xs, ys = make_synthetic(1.0, 1.0, num_devices=n_dev, samples_per_device=30,
+                            dim=dim, seed=5)
+    ds = FederatedDataset(xs, ys, np.ones(ys.shape, np.float32),
+                          xs.reshape(-1, dim)[:150], ys.reshape(-1)[:150], 10)
+    model = get_model(ArchConfig(name="lr", family="logreg", input_dim=dim,
+                                 num_classes=10))
+    return ds, model.init(jax.random.PRNGKey(0))
+
+
+def _async(ds, params, seed=11, **kw):
+    base = dict(aggregator="contextual_async", num_devices=ds.num_devices,
+                buffer_size=3, lr=0.2, batch_size=10, min_epochs=1,
+                max_epochs=4)
+    base.update(kw)
+    fleet = bimodal_fleet(ds.num_devices, slowdown=8.0, dropout_slow=0.2,
+                          seed=0)
+    return run_async_simulation("async", logistic_loss, logistic_apply,
+                                params, ds, AsyncConfig(**base), fleet,
+                                num_aggregations=8, selection_seed=seed,
+                                eval_every=2)
+
+
+def test_async_simulation_runs_and_is_deterministic(tiny_problem):
+    ds, params = tiny_problem
+    r1 = _async(ds, params)
+    r2 = _async(ds, params)
+    assert r1.times == r2.times
+    assert r1.train_loss == r2.train_loss
+    assert np.isfinite(r1.train_loss).all()
+    assert all(b >= a for a, b in zip(r1.times, r1.times[1:]))
+    # conservation surfaced in the result: nothing lost besides dropouts
+    assert r1.arrived + r1.dropped <= r1.dispatched
+    assert r1.arrived >= 8 * 3          # at least buffer_size per aggregation
+    assert r1.versions[-1] == 8
+
+
+def test_async_simulation_learns(tiny_problem):
+    ds, params = tiny_problem
+    r = _async(ds, params, seed=13)
+    assert r.train_loss[-1] < r.train_loss[0]
+
+
+def test_concurrency_cap_rotates_across_whole_fleet(tiny_problem):
+    """A concurrency cap limits in-flight tasks, not which devices may ever
+    participate: the FIFO idle queue must rotate work across the fleet."""
+    ds, params = tiny_problem
+    r = _async(ds, params, concurrency=3)
+    assert r.updates_per_device.sum() == r.arrived
+    assert (r.updates_per_device > 0).sum() >= ds.num_devices - 2
+
+
+def test_async_fedbuff_baseline_runs(tiny_problem):
+    ds, params = tiny_problem
+    r = _async(ds, params, aggregator="fedbuff", server_lr=0.5)
+    assert np.isfinite(r.train_loss).all()
+
+
+def test_async_config_validation(tiny_problem):
+    with pytest.raises(ValueError, match="fedasync"):
+        AsyncConfig(aggregator="fedasync", buffer_size=4)
+    with pytest.raises(ValueError, match="concurrency"):
+        AsyncConfig(concurrency=0)
+    ds, params = tiny_problem
+    with pytest.raises(ValueError, match="fleet"):
+        run_async_simulation("x", logistic_loss, logistic_apply, params, ds,
+                             AsyncConfig(num_devices=ds.num_devices),
+                             uniform_fleet(3), num_aggregations=1)
+
+
+# ---------------------------------------------------------------------------
+# wallclock conversion
+# ---------------------------------------------------------------------------
+
+def test_sync_round_durations_deterministic_and_straggler_gated(tiny_problem):
+    ds, params = tiny_problem
+    cfg = ServerConfig(num_devices=10, clients_per_round=4, batch_size=10,
+                       min_epochs=1, max_epochs=4)
+    fast = uniform_fleet(10, jitter=0.0)
+    slow = bimodal_fleet(10, slow_frac=0.5, slowdown=50.0, jitter=0.0, seed=0)
+    fps = model_flops_per_step(params, cfg.batch_size)
+    pb = model_payload_bytes(params)
+    d1 = sync_round_durations(fast, cfg, 3, 12, fps, pb, selection_seed=9)
+    d2 = sync_round_durations(fast, cfg, 3, 12, fps, pb, selection_seed=9)
+    np.testing.assert_array_equal(d1, d2)
+    d3 = sync_round_durations(slow, cfg, 3, 12, fps, pb, selection_seed=9)
+    # a 50× straggler cohort must dominate the round time
+    assert np.median(d3) > 2.0 * np.median(d1)

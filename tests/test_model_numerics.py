@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis; skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import flash_attention, naive_attention
