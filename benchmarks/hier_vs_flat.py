@@ -1,0 +1,106 @@
+"""Hierarchical vs flat contextual aggregation: fan-in and depth sweep.
+
+Sweeps the gateway count of a two-tier topology (cloud fan-in) and adds a
+three-tier geo-partitioned tree, reporting per configuration: final loss
+and accuracy vs the flat (star) baseline, measured cloud-uplink bytes and
+the savings ratio, and round-time on the multi-hop critical path.  The
+interesting trends: uplink savings grow ~K/(2·P) with fewer gateways, the
+loss gap stays small because the mass-conserving γ stage only reallocates
+weight, and the extra tier costs latency, not bytes.
+
+Emits ``name,us_per_call,derived`` rows like every other benchmark module;
+``collect()`` returns a JSON-ready dict for ``run.py --json``
+(→ ``BENCH_hier.json``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.edge import bimodal_fleet, uniform_fleet
+from repro.fl import run_hier_simulation
+from repro.hier import (HierConfig, geo_partitioned_topology, star_topology,
+                        two_tier_topology)
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.models.logistic import logistic_apply, logistic_loss
+
+from .common import dataset, emit
+
+SEED = 42
+GATEWAY_COUNTS = (2, 4, 8)
+
+
+def _setup():
+    ds = dataset("synthetic_1_1")
+    params = get_model(ArchConfig(name="lr", family="logreg",
+                                  input_dim=ds.x.shape[-1],
+                                  num_classes=ds.num_classes)
+                       ).init(jax.random.PRNGKey(0))
+    return ds, params
+
+
+def _run(name, ds, params, cfg, topo, rounds):
+    return run_hier_simulation(name, logistic_loss, logistic_apply, params,
+                               ds, cfg, topo, num_rounds=rounds,
+                               selection_seed=SEED, eval_every=rounds)
+
+
+def collect(rounds: int = 20) -> Dict[str, List[dict]]:
+    """Run the sweep and return JSON-ready records (also used by --json)."""
+    ds, params = _setup()
+    n = ds.num_devices
+    fleet = bimodal_fleet(n, slowdown=10.0, dropout_slow=0.05, seed=0)
+    base = dict(lr=0.2, batch_size=10, min_epochs=1, max_epochs=10)
+
+    flat = _run("flat", ds, params,
+                HierConfig(aggregator="hier_contextual", **base),
+                star_topology(fleet), rounds)
+    records = [{
+        "topology": "star", "depth": 1, "gateways": 0, "method": "contextual",
+        "final_loss": flat.train_loss[-1], "final_acc": flat.test_acc[-1],
+        "cloud_uplink_bytes": flat.cloud_uplink_bytes,
+        "uplink_savings": 1.0, "loss_gap_vs_flat": 0.0,
+        "round_time_s": flat.times[-1] / rounds,
+    }]
+
+    def record(topo, depth, gws, agg, r):
+        gap = abs(r.train_loss[-1] - flat.train_loss[-1]) / flat.train_loss[-1]
+        records.append({
+            "topology": topo, "depth": depth, "gateways": gws, "method": agg,
+            "final_loss": r.train_loss[-1], "final_acc": r.test_acc[-1],
+            "cloud_uplink_bytes": r.cloud_uplink_bytes,
+            "uplink_savings": flat.cloud_uplink_bytes / r.cloud_uplink_bytes,
+            "loss_gap_vs_flat": gap,
+            "round_time_s": r.times[-1] / rounds,
+        })
+
+    for gws in GATEWAY_COUNTS:              # fan-in sweep, two tiers
+        topo = two_tier_topology(fleet, gws)
+        for agg in ("hier_contextual", "hier_fedavg"):
+            r = _run(f"g{gws}-{agg}", ds, params,
+                     HierConfig(aggregator=agg, **base), topo, rounds)
+            record("two_tier", 2, gws, agg, r)
+
+    geo = geo_partitioned_topology(uniform_fleet(n), num_regions=2,
+                                   gateways_per_region=2)
+    r = _run("geo", ds, params,
+             HierConfig(aggregator="hier_contextual", **base), geo, rounds)
+    record("geo", 3, 4, "hier_contextual", r)
+
+    return {"benchmark": "hier_vs_flat", "num_devices": n, "rounds": rounds,
+            "records": records}
+
+
+def run(rounds: int = 20) -> Dict[str, List[dict]]:
+    results = collect(rounds)
+    for rec in results["records"]:
+        derived = (f"depth={rec['depth']};gw={rec['gateways']};"
+                   f"loss={rec['final_loss']:.4f};"
+                   f"gap={rec['loss_gap_vs_flat'] * 100:.1f}%;"
+                   f"uplink_savings={rec['uplink_savings']:.1f}x")
+        emit(f"hier_vs_flat/{rec['topology']}/g{rec['gateways']}/"
+             f"{rec['method']}", rec["round_time_s"] * 1e6, derived)
+    return results

@@ -5,56 +5,75 @@
   fig6    — rounds-to-accuracy across the four datasets (Fig. 6)
   fig7    — aggregation-variable (α) statistics per stage (Fig. 7)
   async   — async edge runtime vs sync under straggler severity sweep
+  hier    — hierarchical vs flat contextual: fan-in / tier-depth sweep
   kernels — Pallas hot-spot micro-benchmarks
   roofline— per-(arch × shape × mesh) roofline terms from the dry-run
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks round counts.
-``--json`` additionally writes the async sweep to ``BENCH_async.json`` so the
-perf trajectory accumulates across PRs.
+``--json`` additionally writes each JSON-capable bench (one whose ``run``
+returns a records dict) to ``BENCH_<name>.json`` so the perf trajectory
+accumulates across PRs.
 """
 import argparse
 import json
 import sys
 
 
+def _registry():
+    """name -> (module, kwargs_fn(quick) -> run kwargs, emits_json)."""
+    from . import (async_vs_sync, fig2_3_k2_variants, fig4_5_algorithms,
+                   fig6_rounds_to_accuracy, fig7_alpha_stages, hier_vs_flat,
+                   kernel_bench, roofline_report)
+    return {
+        "fig2_3": (fig2_3_k2_variants,
+                   lambda q: dict(rounds=10 if q else 25), False),
+        "fig4_5": (fig4_5_algorithms,
+                   lambda q: dict(rounds=12 if q else 40), False),
+        "fig6": (fig6_rounds_to_accuracy,
+                 lambda q: dict(rounds=15 if q else 50), False),
+        "fig7": (fig7_alpha_stages,
+                 lambda q: dict(rounds=10 if q else 30), False),
+        "async": (async_vs_sync,
+                  lambda q: dict(rounds=12 if q else 30,
+                                 aggs=12 if q else 30), True),
+        "hier": (hier_vs_flat, lambda q: dict(rounds=8 if q else 20), True),
+        "kernels": (kernel_bench, lambda q: {}, False),
+        "roofline": (roofline_report, lambda q: {}, False),
+    }
+
+
 def main() -> None:
+    registry = _registry()
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig2_3,fig4_5,fig6,fig7,"
-                         "async,kernels,roofline")
+                    help="comma-separated subset: " + ",".join(registry))
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", action="store_true",
-                    help="write machine-readable results (BENCH_async.json)")
+                    help="write BENCH_<name>.json for each JSON-capable "
+                         "bench in the selection")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
-
-    from . import (async_vs_sync, fig2_3_k2_variants, fig4_5_algorithms,
-                   fig6_rounds_to_accuracy, fig7_alpha_stages, kernel_bench,
-                   roofline_report)
+    if only:
+        unknown = only - set(registry)
+        if unknown:
+            ap.error(f"unknown bench(es) {sorted(unknown)}; "
+                     f"have {sorted(registry)}")
 
     print("name,us_per_call,derived")
-    if only is None or "fig2_3" in only:
-        fig2_3_k2_variants.run(rounds=10 if args.quick else 25)
-    if only is None or "fig4_5" in only:
-        fig4_5_algorithms.run(rounds=12 if args.quick else 40)
-    if only is None or "fig6" in only:
-        fig6_rounds_to_accuracy.run(rounds=15 if args.quick else 50)
-    if only is None or "fig7" in only:
-        fig7_alpha_stages.run(rounds=10 if args.quick else 30)
-    if only is None or "async" in only:
-        async_results = async_vs_sync.run(rounds=12 if args.quick else 30,
-                                          aggs=12 if args.quick else 30)
-        if args.json:
-            with open("BENCH_async.json", "w") as f:
-                json.dump(async_results, f, indent=2)
-            print("wrote BENCH_async.json", file=sys.stderr)
-    elif args.json:
-        print("--json currently only records the 'async' section, which "
-              "--only excluded; no file written", file=sys.stderr)
-    if only is None or "kernels" in only:
-        kernel_bench.run()
-    if only is None or "roofline" in only:
-        roofline_report.run()
+    wrote_json = False
+    for name, (module, kwargs_fn, emits_json) in registry.items():
+        if only is not None and name not in only:
+            continue
+        results = module.run(**kwargs_fn(args.quick))
+        if args.json and emits_json:
+            path = f"BENCH_{name}.json"
+            with open(path, "w") as f:
+                json.dump(results, f, indent=2)
+            print(f"wrote {path}", file=sys.stderr)
+            wrote_json = True
+    if args.json and not wrote_json:
+        print("--json: no JSON-capable bench in the selection; "
+              "no file written", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,9 @@ from .distributed import (contextual_combine_sharded,
 from .flatten import (scope_vector, select_scope, stacked_weighted_sum,
                       tree_add, tree_scale, tree_size, tree_sub,
                       tree_to_vector, tree_weighted_sum, vector_to_tree)
-from .gram import gram_and_cross, gram_and_cross_chunked, gram_residual
+from .gram import (blockwise_gram_and_cross, gram_and_cross,
+                   gram_and_cross_chunked, gram_block, gram_block_chunked,
+                   gram_residual, merge_gram_blocks)
 from .solve import (SolveConfig, bound_value, solve_alpha, solve_alpha_simple,
                     theorem1_reduction)
 
@@ -29,7 +31,9 @@ __all__ = [
     "hierarchical_contextual_combine", "sharded_combine", "sharded_gram_cross",
     "scope_vector", "select_scope", "stacked_weighted_sum", "tree_add",
     "tree_scale", "tree_size", "tree_sub", "tree_to_vector",
-    "tree_weighted_sum", "vector_to_tree", "gram_and_cross",
-    "gram_and_cross_chunked", "gram_residual", "SolveConfig", "bound_value",
+    "tree_weighted_sum", "vector_to_tree", "blockwise_gram_and_cross",
+    "gram_and_cross", "gram_and_cross_chunked", "gram_block",
+    "gram_block_chunked", "gram_residual", "merge_gram_blocks",
+    "SolveConfig", "bound_value",
     "solve_alpha", "solve_alpha_simple", "theorem1_reduction",
 ]

@@ -14,11 +14,20 @@ Two execution paths:
   * ``gram_and_cross_chunked``    — lax.scan streaming over n-chunks, the
     memory-bound formulation mirrored by the Pallas kernel in
     ``repro.kernels.gram`` (which ops.py dispatches to on TPU).
+
+Block composition (the hierarchical-aggregation identity, ``repro.hier``):
+partition the fleet's K updates into P groups U = [U_1; …; U_P].  Then G is
+the P×P block matrix with blocks ``G_gh = U_g U_hᵀ`` and c concatenates the
+per-group ``c_g = U_g g`` — the Gram statistics compose *exactly*, so a
+gateway can compute its diagonal block locally and the full-fleet (G, c) is
+reassembled block-wise (:func:`merge_gram_blocks`) without ever re-touching
+the parameter axis.  ``gram_block`` / ``gram_block_chunked`` compute one
+block; the Pallas twin lives in ``repro.kernels.gram.gram_block_pallas``.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Mapping, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +70,89 @@ def gram_and_cross_chunked(updates: jax.Array, grad: jax.Array,
     init = (jnp.zeros((K, K), jnp.float32), jnp.zeros((K,), jnp.float32))
     (G, c), _ = jax.lax.scan(body, init, (u, g))
     return G, c
+
+
+def gram_block(ua: jax.Array, ub: jax.Array,
+               dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """One off-diagonal Gram block ``G_ab = U_a U_bᵀ (K_a, K_b)``."""
+    return ua.astype(dtype) @ ub.astype(dtype).T
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def gram_block_chunked(ua: jax.Array, ub: jax.Array,
+                       chunk: int = 1 << 16) -> jax.Array:
+    """Streaming ``U_a U_bᵀ``: one pass over the shared parameter axis."""
+    Ka, n = ua.shape
+    Kb, nb = ub.shape
+    if n != nb:
+        raise ValueError(f"block operands disagree on n: {n} vs {nb}")
+    pad = (-n) % chunk
+    a = jnp.pad(ua, ((0, 0), (0, pad)))
+    b = jnp.pad(ub, ((0, 0), (0, pad)))
+    steps = (n + pad) // chunk
+    a = a.reshape(Ka, steps, chunk).transpose(1, 0, 2)
+    b = b.reshape(Kb, steps, chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        ac, bc = xs
+        return acc + ac.astype(jnp.float32) @ bc.astype(jnp.float32).T, None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((Ka, Kb), jnp.float32), (a, b))
+    return out
+
+
+def merge_gram_blocks(diag: Sequence[jax.Array],
+                      cross: Mapping[Tuple[int, int], jax.Array],
+                      cross_terms: Sequence[jax.Array]
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Reassemble full-fleet ``(G, c)`` from per-group pieces.
+
+    ``diag[g]`` is group g's local Gram block ``U_g U_gᵀ``; ``cross[(g, h)]``
+    (g < h) is the off-diagonal block ``U_g U_hᵀ`` (the transpose fills
+    (h, g) — G is symmetric by construction); ``cross_terms[g]`` is ``U_g g``.
+    Group order fixes the row/column order of the result, so merging the
+    groups of a :class:`repro.hier.Topology` in gateway order reproduces the
+    flat-fleet :func:`gram_and_cross` exactly (tested, incl. uneven groups).
+    """
+    P = len(diag)
+    if len(cross_terms) != P:
+        raise ValueError(f"{P} diagonal blocks but {len(cross_terms)} "
+                         "cross-term segments")
+    rows = []
+    for g in range(P):
+        row = []
+        for h in range(P):
+            if g == h:
+                blk = diag[g]
+            elif g < h:
+                blk = cross[(g, h)]
+            else:
+                blk = cross[(h, g)].T
+            row.append(blk)
+        rows.append(jnp.concatenate(row, axis=1))
+    return jnp.concatenate(rows, axis=0), jnp.concatenate(list(cross_terms))
+
+
+def blockwise_gram_and_cross(groups: Sequence[jax.Array], grad: jax.Array,
+                             block_fn=None, diag_fn=None
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Compute full ``(G, c)`` from per-group update matrices via block
+    composition — the reference for what a gateway tier computes in pieces.
+
+    ``diag_fn(U_g, g) -> (G_gg, c_g)`` defaults to :func:`gram_and_cross`;
+    ``block_fn(U_g, U_h) -> G_gh`` defaults to :func:`gram_block`.  Passing
+    the chunked/Pallas variants exercises those paths (see tests).
+    """
+    diag_fn = diag_fn or gram_and_cross
+    block_fn = block_fn or gram_block
+    diag, cross_terms, cross = [], [], {}
+    for g, ug in enumerate(groups):
+        Gg, cg = diag_fn(ug, grad)
+        diag.append(Gg)
+        cross_terms.append(cg)
+        for h in range(g + 1, len(groups)):
+            cross[(g, h)] = block_fn(ug, groups[h])
+    return merge_gram_blocks(diag, cross, cross_terms)
 
 
 def gram_residual(G: jax.Array, c: jax.Array, alpha: jax.Array, beta) -> jax.Array:

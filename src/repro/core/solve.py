@@ -15,6 +15,21 @@ The expected-bound variant (§III-C) has stationarity
     ⇒ α* = −(1/β) · (N−1)/(K−1) · G⁺ c
 
 i.e. the same solve scaled by (N−1)/(K−1) — implemented via ``expectation_scale``.
+
+``sum_to`` switches to the mass-conserving variant used by the hierarchical
+cloud stage (``repro.hier``): minimise g(α) subject to Σ α_k = s, via the KKT
+system
+
+    [ β(G + ρI)   1 ] [α]   [−c]
+    [    1ᵀ       0 ] [λ] = [ s ].
+
+When the solve's members are *already β-calibrated tier combinations* (each
+carries its own 1/β factor), the unconstrained restricted optimum
+systematically shrinks the aggregate step — the restricted span underprices
+alignment — so the parent tier only reallocates mass, never rescales it.
+Every corner γ = e_g is feasible, so the constrained bound is at least as
+good as promoting any single child's combination (or any convex mix, e.g.
+hier-FedAvg's count weighting).
 """
 from __future__ import annotations
 
@@ -33,19 +48,37 @@ class SolveConfig:
     method: str = "cholesky"        # "cholesky" | "pinv"
     expectation_scale: float = 1.0  # (N-1)/(K-1) for the §III-C variant
     clip_norm: Optional[float] = None  # optional safety clip on ‖α‖ (beyond-paper)
+    sum_to: Optional[float] = None  # mass-conserving Σα = s constraint (the
+                                    # hierarchical parent-tier solve; see
+                                    # module docstring — overrides
+                                    # expectation_scale, which would break it)
+
+    def __post_init__(self):
+        if self.sum_to is not None and self.clip_norm is not None:
+            raise ValueError("clip_norm cannot be combined with sum_to: "
+                             "rescaling α would silently break the Σα mass "
+                             "constraint")
 
 
 def solve_alpha(G: jax.Array, c: jax.Array, cfg: SolveConfig) -> jax.Array:
     """Return α* minimising the context-dependent bound."""
     K = G.shape[0]
     scale = jnp.maximum(jnp.trace(G) / K, 1e-30)
-    if cfg.method == "pinv":
+    if cfg.sum_to is not None:
+        A = cfg.beta * (G + (cfg.ridge * scale) * jnp.eye(K, dtype=G.dtype))
+        ones = jnp.ones((K,), G.dtype)
+        kkt = jnp.block([[A, ones[:, None]],
+                         [ones[None, :], jnp.zeros((1, 1), G.dtype)]])
+        rhs = jnp.concatenate([-c, jnp.full((1,), cfg.sum_to, G.dtype)])
+        alpha = jnp.linalg.solve(kkt, rhs)[:K]
+    elif cfg.method == "pinv":
         alpha = -jnp.linalg.pinv(G, rtol=1e-6) @ c / cfg.beta
+        alpha = alpha * cfg.expectation_scale
     else:
         A = G + (cfg.ridge * scale) * jnp.eye(K, dtype=G.dtype)
         # PSD solve via Cholesky; jnp.linalg.solve is fine on CPU/TPU for K<=64
         alpha = -jnp.linalg.solve(A, c) / cfg.beta
-    alpha = alpha * cfg.expectation_scale
+        alpha = alpha * cfg.expectation_scale
     if cfg.clip_norm is not None:
         norm = jnp.linalg.norm(alpha)
         alpha = alpha * jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norm, 1e-30))

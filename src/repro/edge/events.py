@@ -47,9 +47,11 @@ class Event:
 
 @dataclass
 class SchedulerStats:
-    dispatched: int = 0
-    arrived: int = 0
-    dropped: int = 0
+    dispatched: int = 0            # device tasks handed out
+    arrived: int = 0               # device updates that reached their parent
+    dropped: int = 0               # device tasks lost mid-flight
+    transfers: int = 0             # backhaul link events scheduled
+    transfers_done: int = 0        # backhaul link events delivered
 
 
 class EventScheduler:
@@ -66,14 +68,22 @@ class EventScheduler:
         self.trace: List[Event] = []      # full event log (tests, debugging)
         self._heap: List[Event] = []
         self._seq = itertools.count()
+        self._transfer_seqs: set = set()  # pending link events (not devices)
 
     # -- dispatch ----------------------------------------------------------
-    def dispatch(self, device_id: int, num_steps: int, version: int) -> Event:
+    def dispatch(self, device_id: int, num_steps: int, version: int,
+                 at: Optional[float] = None) -> Event:
         """Hand ``device_id`` a task of ``num_steps`` local steps at the
-        current virtual time; schedules its terminal ARRIVAL/DROPOUT event."""
+        current virtual time (or at ``at`` ≥ now — the hierarchical runtime
+        delays dispatch until the model broadcast reaches the device's
+        gateway); schedules its terminal ARRIVAL/DROPOUT event."""
+        start = self.now if at is None else at
+        if start < self.now - 1e-12:
+            raise ValueError(f"cannot dispatch in the past: at={at} < "
+                             f"now={self.now}")
         prof = self.fleet[device_id]
         seq = next(self._seq)
-        disp = Event(self.now, seq, EventKind.DISPATCH, device_id,
+        disp = Event(start, seq, EventKind.DISPATCH, device_id,
                      num_steps=num_steps, version=version)
         self.trace.append(disp)
         self.stats.dispatched += 1
@@ -87,7 +97,27 @@ class EventScheduler:
             kind = EventKind.DROPOUT
         else:
             kind = EventKind.ARRIVAL
-        evt = Event(self.now + duration, seq, kind, device_id,
+        evt = Event(start + duration, seq, kind, device_id,
+                    num_steps=num_steps, version=version)
+        heapq.heappush(self._heap, (evt.time, evt.seq, evt))
+        return evt
+
+    def schedule(self, delay: float, node_id: int,
+                 kind: EventKind = EventKind.ARRIVAL,
+                 num_steps: int = 0, version: int = 0) -> Event:
+        """Schedule an arbitrary terminal event ``delay`` after now — the
+        hierarchical runtime's multi-hop link transfers (gateway summary →
+        regional → cloud).  ``node_id`` may exceed the fleet size: interior
+        tree nodes are not devices and consume no fleet profile or RNG draws,
+        so scheduling keeps the device event stream deterministic.  Counted
+        in ``stats.transfers``/``transfers_done`` — never in the device-task
+        dispatched/arrived/dropped counters."""
+        if delay < 0:
+            raise ValueError(f"delay must be >= 0, got {delay}")
+        seq = next(self._seq)
+        self.stats.transfers += 1
+        self._transfer_seqs.add(seq)
+        evt = Event(self.now + delay, seq, kind, node_id,
                     num_steps=num_steps, version=version)
         heapq.heappush(self._heap, (evt.time, evt.seq, evt))
         return evt
@@ -103,7 +133,10 @@ class EventScheduler:
         _, _, evt = heapq.heappop(self._heap)
         self.now = evt.time
         self.trace.append(evt)
-        if evt.kind == EventKind.ARRIVAL:
+        if evt.seq in self._transfer_seqs:
+            self._transfer_seqs.discard(evt.seq)
+            self.stats.transfers_done += 1
+        elif evt.kind == EventKind.ARRIVAL:
             self.stats.arrived += 1
         else:
             self.stats.dropped += 1
@@ -111,9 +144,11 @@ class EventScheduler:
 
     # -- invariants (cheap enough to assert in tests) ----------------------
     def conservation_ok(self) -> bool:
-        """Every dispatch is in-flight xor terminal — nothing lost/duplicated."""
-        return (self.stats.dispatched
-                == self.stats.arrived + self.stats.dropped + self.pending())
+        """Every dispatch/transfer is in-flight xor terminal — nothing
+        lost/duplicated."""
+        return (self.stats.dispatched + self.stats.transfers
+                == self.stats.arrived + self.stats.dropped
+                + self.stats.transfers_done + self.pending())
 
     def trace_signature(self) -> List[tuple]:
         """Hashable rendering of the full trace for determinism tests."""

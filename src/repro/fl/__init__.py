@@ -2,13 +2,15 @@ from .client import client_update, local_gradient
 from .metrics import evaluate_classifier, global_train_loss
 from .scaffold import ScaffoldState, build_scaffold_round_fn, run_scaffold
 from .server import RoundState, ServerConfig, build_round_fn, init_server
-from .simulation import (AsyncSimulationResult, SimulationResult,
-                         run_async_simulation, run_simulation)
+from .simulation import (AsyncSimulationResult, HierSimulationResult,
+                         SimulationResult, run_async_simulation,
+                         run_hier_simulation, run_simulation)
 
 __all__ = [
     "client_update", "local_gradient", "evaluate_classifier",
     "global_train_loss", "RoundState", "ServerConfig", "build_round_fn",
-    "init_server", "AsyncSimulationResult", "SimulationResult",
-    "run_async_simulation", "run_simulation", "ScaffoldState",
-    "build_scaffold_round_fn", "run_scaffold",
+    "init_server", "AsyncSimulationResult", "HierSimulationResult",
+    "SimulationResult", "run_async_simulation", "run_hier_simulation",
+    "run_simulation", "ScaffoldState", "build_scaffold_round_fn",
+    "run_scaffold",
 ]

@@ -11,6 +11,14 @@ speeds, updates arrive asynchronously, and the server aggregates buffered
 (possibly stale) updates.  Both paths share the eval/metrics code, and the
 async event stream is itself a pure function of (fleet, seed) — aggregation
 choices never perturb timing — so algorithms remain comparable.
+
+``run_hier_simulation`` runs synchronous rounds over a ``repro.hier``
+multi-tier topology: the model broadcast flows down the tree, devices train,
+each aggregation node waits for its members (timeout model: dropouts still
+cost their partial time), summarizes, and ships the summary one hop up —
+every hop is an event on the PR-1 scheduler, so round times are true
+multi-hop critical paths and the per-tier byte ledger measures the uplink
+saving the hierarchy exists for.
 """
 from __future__ import annotations
 
@@ -232,4 +240,368 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     result.dispatched = scheduler.stats.dispatched
     result.arrived = scheduler.stats.arrived
     result.dropped = scheduler.stats.dropped
+    return result
+
+
+@dataclass
+class HierSimulationResult:
+    """Metrics of a hierarchical run, indexed by virtual wall-clock."""
+    name: str
+    times: List[float] = field(default_factory=list)       # round-end seconds
+    train_loss: List[float] = field(default_factory=list)
+    test_acc: List[float] = field(default_factory=list)
+    test_nll: List[float] = field(default_factory=list)
+    gamma_history: List[np.ndarray] = field(default_factory=list)
+    comm: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    cloud_uplink_bytes: float = 0.0
+    total_bytes: float = 0.0
+    dispatched: int = 0         # device tasks only (backhaul transfers are
+    arrived: int = 0            # scheduler events but not counted here, so
+    dropped: int = 0            # these match AsyncSimulationResult semantics)
+    rounds_skipped: int = 0     # rounds where every participant dropped out
+    wall_time: float = 0.0
+
+    def time_to_accuracy(self, level: float) -> Optional[float]:
+        return self.to_curve().time_to_accuracy(level)
+
+    def to_curve(self):
+        from ..edge.wallclock import WallclockCurve
+        return WallclockCurve(name=self.name, times=list(self.times),
+                              test_acc=list(self.test_acc),
+                              train_loss=list(self.train_loss))
+
+
+def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
+                        init_params: Pytree, dataset: FederatedDataset,
+                        cfg, topology, num_rounds: int,
+                        selection_seed: int = 1234, eval_every: int = 1,
+                        collect_gamma: bool = False) -> HierSimulationResult:
+    """Synchronous rounds over a multi-tier topology (``cfg`` is a
+    :class:`repro.hier.HierConfig`, ``topology`` a :class:`repro.hier.Topology`).
+
+    Per round: the model broadcast flows down the backhaul links, every
+    gateway's (fan-in-sampled) devices train at profile speed, each
+    aggregation node completes when its last member's terminal event pops —
+    dropouts lose their update but still gate the node (timeout model, as in
+    the flat sync path) — then its summary rides the uplink as a scheduled
+    multi-hop event.  The round ends when the cloud's last child reports; the
+    cloud stage goes through the ``core.aggregation`` registry
+    (``hier_contextual`` / ``hier_fedavg`` / ``hier_relay``).
+    """
+    # Imported lazily: repro.hier imports repro.edge which imports repro.fl,
+    # so the reverse edge must not exist at import time.
+    from ..edge.events import EventKind, EventScheduler
+    from ..edge.wallclock import model_flops_per_step, model_payload_bytes
+    from ..hier.comm import CommLedger, summary_bytes, update_bytes
+    from ..hier.gateway import (weighted_mean_trees, merge_summaries,
+                                summarize_updates)
+    from ..hier.hier_server import blockdiag_diagnostics, cloud_aggregate
+
+    fleet = topology.fleet
+    if dataset.num_devices < fleet.num_devices:
+        raise ValueError(f"dataset has {dataset.num_devices} device shards, "
+                         f"topology needs {fleet.num_devices}")
+
+    steps_per_epoch = max(dataset.samples_per_device // cfg.batch_size, 1)
+    max_steps = cfg.max_epochs * steps_per_epoch
+    upd = partial(client_update, loss_fn, max_steps=max_steps,
+                  batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu)
+
+    @jax.jit
+    def batch_update(params, xs, ys, ms, ns, keys):
+        return jax.vmap(lambda xx, yy, mm, n, k: upd(params, xx, yy, mm, n, k)
+                        )(xs, ys, ms, ns, keys)
+
+    params = jax.tree_util.tree_map(jnp.asarray, init_params)
+    x = jnp.asarray(dataset.x)
+    y = jnp.asarray(dataset.y)
+    mask = jnp.asarray(dataset.mask)
+    test_x, test_y = jnp.asarray(dataset.test_x), jnp.asarray(dataset.test_y)
+
+    n_model = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    mbytes = model_payload_bytes(params)
+    scheduler = EventScheduler(
+        fleet, seed=selection_seed,
+        flops_per_step=model_flops_per_step(params, cfg.batch_size),
+        payload_bytes=mbytes)
+    ledger = CommLedger(topology.depth)
+    sel_rng = np.random.RandomState(selection_seed)
+    base_key = jax.random.PRNGKey(selection_seed)
+
+    gateways = topology.gateways            # tier-1 nodes (the cloud, if star)
+    solve_cfg = cfg.solve_config()
+    relay = cfg.aggregator == "hier_relay"
+    tier_mode = cfg.tier_mode
+
+    # model-broadcast delay & per-link down-bytes from the cloud to each
+    # gateway (device-tier downlink is inside DeviceProfile.task_time)
+    def broadcast_path(gw):
+        path, node = [], gw
+        while node.parent is not None:
+            path.append(node)
+            node = topology.nodes[node.parent]
+        return list(reversed(path))         # cloud-side hop first
+
+    result = HierSimulationResult(name=name)
+    t0 = time.time()
+    for t in range(num_rounds):
+        round_start = scheduler.now
+        # -- selection (identical-selection protocol: one shared RNG) -------
+        participants: List[tuple] = []      # (device_id, gateway_id)
+        for gw in gateways:
+            devs = np.asarray(gw.children)
+            if cfg.fan_in is not None and cfg.fan_in < len(devs):
+                devs = np.sort(sel_rng.choice(devs, cfg.fan_in,
+                                              replace=False))
+            participants.extend((int(d), gw.node_id) for d in devs)
+        epochs = sel_rng.randint(cfg.min_epochs, cfg.max_epochs + 1,
+                                 size=len(participants))
+        num_steps = (epochs * steps_per_epoch).astype(np.int32)
+        P = len(participants)
+
+        # -- downlink broadcast, then dispatch at each gateway's model-arrival
+        down_delay = {}
+        for gw in gateways:
+            delay = 0.0
+            for hop in broadcast_path(gw):
+                dl = hop.uplink.downlink_time(mbytes)
+                ledger.record_down(hop.tier, mbytes, dl)
+                delay += dl
+            down_delay[gw.node_id] = delay
+        for (dev, gid), ns in zip(participants, num_steps):
+            ledger.record_down(0, mbytes)   # device model fetch (profile-timed)
+            scheduler.dispatch(dev, int(ns), version=t,
+                               at=round_start + down_delay[gid])
+
+        # -- local training for the whole cohort (vmap, one compile) --------
+        sel = jnp.asarray(np.array([d for d, _ in participants]))
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(
+            base_key, jnp.arange(t * P, (t + 1) * P, dtype=jnp.uint32))
+        deltas, grads = batch_update(params, x[sel], y[sel], mask[sel],
+                                     jnp.asarray(num_steps), keys)
+        take = lambda stacked, i: jax.tree_util.tree_map(
+            lambda l: l[i], stacked)
+
+        # -- event loop: device terminals, then multi-hop transfers ---------
+        # Contextual tiers run a gradient pre-pass: each gateway ships its
+        # cohort ĝ_g up first (n floats), the cloud assembles the global ĝ
+        # and broadcasts it back down, and only then do gateways solve and
+        # ship (ū_g, G_g, c_g).  Total uplink is identical to packing ĝ_g
+        # inside the summary — the pre-pass just reorders it — but every
+        # tier's c-term is now priced against the *global* ∇f estimate; a
+        # gateway cohort is a skewed sample of a non-IID fleet, and a solve
+        # against the skewed local ĝ misweights the whole cohort in a way
+        # the parent's γ rescale cannot repair.
+        gw_of = {d: g for d, g in participants}
+        idx_of = {d: i for i, (d, _) in enumerate(participants)}
+        use_prepass = (topology.depth >= 2 and not relay
+                       and tier_mode == "contextual"
+                       and cfg.gateway_grad == "global")
+        out_dev = {gw.node_id: sum(1 for _, g in participants
+                                   if g == gw.node_id) for gw in gateways}
+        interior = [n for tier in range(2, topology.depth + 1)
+                    for n in topology.tier_nodes(tier)]
+        out_grad = {n.node_id: len(n.children) for n in interior}
+        out_sum = {n.node_id: len(n.children) for n in interior}
+        recv_grad: Dict[int, list] = {n.node_id: [] for n in interior}
+        recv_sum: Dict[int, list] = {n.node_id: [] for n in interior}
+        node_ghat: Dict[int, Pytree] = {}
+        survivors: Dict[int, List[int]] = {gw.node_id: [] for gw in gateways}
+        gw_idxs: Dict[int, List[int]] = {}
+        meta: Dict[int, tuple] = {}          # event seq -> (kind, node, payload)
+        ghat_global = None
+        cloud_done = False
+        round_info: Dict[str, Any] = {}
+
+        def send_up(kind, node, payload, nbytes):
+            parent = topology.nodes[node.parent]
+            dt = node.uplink.uplink_time(nbytes)
+            ledger.record_up(parent.tier, nbytes, dt)
+            evt = scheduler.schedule(dt, node.node_id, version=t)
+            meta[evt.seq] = (kind, node.node_id, payload)
+
+        def send_ghat_down(child_id, ghat):
+            child = topology.nodes[child_id]
+            nbytes = update_bytes(n_model)
+            dt = child.uplink.downlink_time(nbytes)
+            ledger.record_down(child.tier, nbytes, dt)
+            evt = scheduler.schedule(dt, child_id, version=t)
+            meta[evt.seq] = ("ghat", child_id, ghat)
+
+        def gone_up(nid, out_map, complete_fn):
+            """Subtree has nothing to report: release the parent's count."""
+            pid = topology.nodes[nid].parent
+            out_map[pid] -= 1
+            if out_map[pid] == 0:
+                complete_fn(pid)
+
+        def gateway_done(gid):
+            node = topology.nodes[gid]
+            idxs = sorted(survivors[gid])    # stable participant order
+            gw_idxs[gid] = idxs
+            if node.parent is None:          # star: the cloud is the gateway
+                finish_cloud(list(idxs) if idxs else None)
+                return
+            if not idxs:
+                if use_prepass:
+                    gone_up(gid, out_grad, on_grad_complete)
+                gone_up(gid, out_sum, on_sum_complete)
+                return
+            if relay:
+                send_up("summary", node, list(idxs),
+                        len(idxs) * update_bytes(n_model))
+            elif use_prepass:
+                ghat_g = weighted_mean_trees(
+                    [take(grads, i) for i in idxs], np.ones(len(idxs)))
+                send_up("grad", node, (ghat_g, len(idxs)),
+                        update_bytes(n_model))
+            else:   # no pre-pass: solve (or average) against the cohort's
+                    # own ĝ_g, which rides up inside the summary
+                send_up("summary", node, _gateway_summary(gid, idxs, None),
+                        summary_bytes(len(idxs), n_model, include_grad=True))
+
+        def _gateway_summary(gid, idxs, solve_grad):
+            return summarize_updates(
+                gid, [participants[i][0] for i in idxs],
+                [take(deltas, i) for i in idxs],
+                [take(grads, i) for i in idxs],
+                [1] * len(idxs), solve_cfg, tier_mode, cfg.gram_scope,
+                solve_grad=solve_grad)
+
+        def on_grad_complete(nid):
+            nonlocal ghat_global
+            node = topology.nodes[nid]
+            entries = recv_grad[nid]         # [(sender, ĝ subtree, count)]
+            if not entries:
+                if node.parent is not None:
+                    gone_up(nid, out_grad, on_grad_complete)
+                return
+            counts = np.asarray([c for _, _, c in entries], np.float64)
+            ghat = weighted_mean_trees([g for _, g, _ in entries], counts)
+            if node.parent is None:          # cloud: broadcast the global ĝ
+                ghat_global = ghat
+                for sender, _, _ in entries:
+                    send_ghat_down(sender, ghat)
+            else:
+                send_up("grad", node, (ghat, int(counts.sum())),
+                        update_bytes(n_model))
+
+        def on_ghat(nid, ghat):
+            node = topology.nodes[nid]
+            node_ghat[nid] = ghat
+            if node.tier == 1:               # gateway: solve and ship
+                idxs = gw_idxs[nid]
+                send_up("summary", node, _gateway_summary(nid, idxs, ghat),
+                        summary_bytes(len(idxs), n_model))
+            else:                            # regional: fan the broadcast out
+                for sender, _, _ in recv_grad[nid]:
+                    send_ghat_down(sender, ghat)
+
+        def on_sum_complete(nid):
+            node = topology.nodes[nid]
+            kids = recv_sum[nid]
+            if node.parent is None:
+                if not kids:
+                    finish_cloud(None)
+                else:
+                    finish_cloud(sum(kids, []) if relay else kids)
+                return
+            if not kids:
+                gone_up(nid, out_sum, on_sum_complete)
+                return
+            if relay:
+                fwd = sum(kids, [])
+                send_up("summary", node, fwd,
+                        len(fwd) * update_bytes(n_model))
+            else:
+                s = merge_summaries(nid, kids, solve_cfg, tier_mode,
+                                    cfg.gram_scope,
+                                    solve_grad=node_ghat.get(nid))
+                send_up("summary", node, s,
+                        summary_bytes(len(kids), n_model,
+                                      include_grad=not use_prepass))
+
+        def finish_cloud(payload):
+            nonlocal cloud_done, round_info, params
+            if payload is None:              # every participant dropped out
+                result.rounds_skipped += 1
+            else:
+                params, round_info = _cloud_stage(payload)
+            cloud_done = True
+
+        def _cloud_stage(payload):
+            if isinstance(payload, list) and isinstance(
+                    payload[0], (int, np.integer)):
+                idxs = jnp.asarray(np.asarray(payload))  # raw (star / relay)
+                stacked = jax.tree_util.tree_map(lambda l: l[idxs], deltas)
+                grad_est = jax.tree_util.tree_map(
+                    lambda l: jnp.mean(l[idxs], axis=0), grads)
+                return cloud_aggregate(params, stacked, grad_est,
+                                       [1] * len(payload), cfg, combos=False)
+            summaries = payload              # top-tier child summaries
+            stacked = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *[s.u_bar for s in summaries])
+            counts = [s.num_updates for s in summaries]
+            grad_est = (ghat_global if ghat_global is not None else
+                        weighted_mean_trees([s.grad_est for s in summaries],
+                                             np.asarray(counts)))
+            new_params, info = cloud_aggregate(params, stacked, grad_est,
+                                               counts, cfg)
+            info.update(blockdiag_diagnostics(summaries, info["gamma"],
+                                              cfg.smoothness))
+            return new_params, info
+
+        max_events = 8 * (P + len(topology.nodes)) + 64
+        for _ in range(max_events):
+            if cloud_done:
+                break
+            evt = scheduler.pop()
+            if evt is None:
+                raise RuntimeError(f"round {t}: event queue exhausted before "
+                                   "the cloud completed")
+            if evt.seq in meta:              # backhaul transfer arrival
+                kind, sender, payload = meta.pop(evt.seq)
+                if kind == "grad":
+                    pid = topology.nodes[sender].parent
+                    recv_grad[pid].append((sender,) + payload)
+                    out_grad[pid] -= 1
+                    if out_grad[pid] == 0:
+                        on_grad_complete(pid)
+                elif kind == "ghat":
+                    on_ghat(sender, payload)
+                else:                        # summary
+                    pid = topology.nodes[sender].parent
+                    recv_sum[pid].append(payload)
+                    out_sum[pid] -= 1
+                    if out_sum[pid] == 0:
+                        on_sum_complete(pid)
+            else:                            # device terminal event
+                gid = gw_of[evt.device_id]
+                if evt.kind == EventKind.ARRIVAL:
+                    survivors[gid].append(idx_of[evt.device_id])
+                    result.arrived += 1
+                    ledger.record_up(topology.nodes[gid].tier,
+                                     update_bytes(n_model))
+                else:
+                    result.dropped += 1
+                out_dev[gid] -= 1
+                if out_dev[gid] == 0:
+                    gateway_done(gid)
+        if not cloud_done:
+            raise RuntimeError(f"round {t}: exceeded {max_events} events")
+        result.dispatched += P
+
+        if collect_gamma and "gamma" in round_info:
+            result.gamma_history.append(np.asarray(round_info["gamma"]))
+        if (t + 1) % eval_every == 0 or t == num_rounds - 1:
+            loss = global_train_loss(loss_fn, params, x, y, mask)
+            nll, acc = evaluate_classifier(apply_fn, params, test_x, test_y)
+            result.times.append(scheduler.now)
+            result.train_loss.append(loss)
+            result.test_acc.append(acc)
+            result.test_nll.append(nll)
+    result.wall_time = time.time() - t0
+    result.comm = ledger.report()
+    result.cloud_uplink_bytes = ledger.cloud_uplink_bytes
+    result.total_bytes = ledger.total_bytes()
     return result

@@ -1,0 +1,104 @@
+"""Per-tier traffic accounting for hierarchical aggregation.
+
+The whole point of the hierarchy is the uplink: a gateway that forwards its
+K_g raw updates costs the backhaul ``K_g·n`` floats per round, while a
+contextual summary costs ``2n + K_g² + 2K_g`` (combined update ū_g, local
+gradient estimate ĝ_g, Gram block G_g, cross term c_g, tier weights α_g) —
+for n ≫ K² that is
+a ~K_g/2× reduction *per gateway*, i.e. fleet-wide cloud-uplink shrinks from
+O(K·n) to O(P·n).  :class:`CommLedger` records every transfer by tier so
+examples/benchmarks can report the measured ratio instead of the formula.
+
+Byte conventions follow ``repro.edge.wallclock``: float32 on the wire, the
+model payload is ``4·|w|`` bytes, and a device upload is the update only (the
+first-step gradient rides along inside the same payload in the K₂=0 scheme,
+exactly as the PR-1 async accounting assumes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from ..core.flatten import tree_size
+
+FLOAT_BYTES = 4.0
+
+
+def update_bytes(n: int) -> float:
+    """One raw update (or one model broadcast): n float32."""
+    return FLOAT_BYTES * n
+
+
+def summary_bytes(k: int, n: int, include_grad: bool = False) -> float:
+    """One gateway summary: ū_g (n) + G_g (k²) + c_g (k) + α_g (k) + counts;
+    with ``include_grad`` the subtree gradient estimate ĝ_g (n) rides inside
+    the summary instead of travelling in the gradient pre-pass (the per-round
+    uplink total is identical either way — 2n + k² + 2k — the pre-pass only
+    reorders it so the solve can use the *global* ĝ)."""
+    return FLOAT_BYTES * ((2 if include_grad else 1) * n + k * k + 2 * k + 2)
+
+
+def model_size(params) -> int:
+    return tree_size(params)
+
+
+@dataclass
+class TierTraffic:
+    """Aggregate traffic crossing into one tier (child → parent direction is
+    ``up``; parent → child is ``down``)."""
+    bytes_up: float = 0.0
+    bytes_down: float = 0.0
+    transfers_up: int = 0
+    transfers_down: int = 0
+    link_seconds: float = 0.0      # summed transfer durations (not wall-clock)
+
+
+class CommLedger:
+    """Accumulates per-tier traffic over a simulation.
+
+    Tier t records transfers whose *receiver* sits on tier t — so the cloud
+    tier's ``bytes_up`` is exactly the cloud-uplink volume the acceptance
+    criterion bounds.
+    """
+
+    def __init__(self, depth: int):
+        self.depth = depth
+        self.tiers: Dict[int, TierTraffic] = {
+            t: TierTraffic() for t in range(depth + 1)}
+
+    def record_up(self, tier: int, nbytes: float, seconds: float = 0.0) -> None:
+        tt = self.tiers[tier]
+        tt.bytes_up += nbytes
+        tt.transfers_up += 1
+        tt.link_seconds += seconds
+
+    def record_down(self, tier: int, nbytes: float,
+                    seconds: float = 0.0) -> None:
+        tt = self.tiers[tier]
+        tt.bytes_down += nbytes
+        tt.transfers_down += 1
+        tt.link_seconds += seconds
+
+    @property
+    def cloud_uplink_bytes(self) -> float:
+        return self.tiers[self.depth].bytes_up
+
+    def total_bytes(self) -> float:
+        return sum(t.bytes_up + t.bytes_down for t in self.tiers.values())
+
+    def savings_vs(self, flat_cloud_uplink_bytes: float) -> Optional[float]:
+        """How many × fewer cloud-uplink bytes than a flat run that moved
+        ``flat_cloud_uplink_bytes``; None until something was recorded."""
+        if self.cloud_uplink_bytes <= 0:
+            return None
+        return flat_cloud_uplink_bytes / self.cloud_uplink_bytes
+
+    def report(self) -> Dict[str, Dict[str, float]]:
+        return {
+            f"tier_{t}": {
+                "bytes_up": tt.bytes_up, "bytes_down": tt.bytes_down,
+                "transfers_up": tt.transfers_up,
+                "transfers_down": tt.transfers_down,
+                "link_seconds": round(tt.link_seconds, 6),
+            } for t, tt in sorted(self.tiers.items())
+        }

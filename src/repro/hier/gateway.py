@@ -1,0 +1,161 @@
+"""Tier-local contextual aggregation producing composable Gram summaries.
+
+A gateway holding K_g member updates runs the paper's contextual solve on its
+*own* cohort — Gram block ``G_g = U_g U_gᵀ``, cross term ``c_g = U_g ĝ_g``,
+stationary ``α_g`` — and emits a :class:`GatewaySummary`:
+
+    (G_g, c_g, α_g, ū_g = Σ_k α_gk Δ_k, ĝ_g, count)
+
+The summary is *composable*: a parent tier treats the children's ū vectors as
+its member updates and runs the identical solve one level up (its gradient
+estimate is the count-weighted mean of the children's ĝ).  Because the Gram
+statistics compose exactly (``core.gram.merge_gram_blocks``), the parent's
+stage is again the paper's bound-optimal solve — restricted to the subspace
+``{α : α|_g ∝ α_g}`` of per-group rescalings of each child's local optimum.
+That subspace contains 0 and every child's own solution, so Theorem 1 holds
+per tier: each aggregation hop can only improve the bound over forwarding any
+single child's combination unchanged.
+
+With a single gateway containing the whole fleet the two-stage solve
+collapses to the flat one *exactly* (the cloud rescale γ = 1 at the gateway's
+stationary point) — tested in ``tests/test_hier.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.flatten import scope_vector, stacked_weighted_sum
+from ..core.gram import gram_and_cross, gram_residual
+from ..core.solve import SolveConfig, bound_value, solve_alpha, theorem1_reduction
+
+Pytree = Any
+
+
+@dataclass
+class GatewaySummary:
+    """What one aggregation node ships to its parent (see ``comm.summary_bytes``)."""
+    node_id: int
+    num_updates: int               # devices under this summary (all tiers below)
+    member_ids: np.ndarray         # immediate children that contributed
+    G: jax.Array                   # (K_g, K_g) tier-local Gram block
+    c: jax.Array                   # (K_g,) tier-local cross term
+    alpha: jax.Array               # (K_g,) tier-local solve weights
+    u_bar: Pytree                  # Σ_k α_k Δ_k, same structure as params
+    grad_est: Pytree               # this subtree's ∇f estimate
+    info: Dict[str, jax.Array]
+
+
+def _stack_trees(trees: Sequence[Pytree]) -> Pytree:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def weighted_mean_trees(trees: Sequence[Pytree], weights: np.ndarray) -> Pytree:
+    """Count-weighted mean of pytrees — how subtree gradient estimates
+    compose up the tree (also used by the runtime's gradient pre-pass)."""
+    w = np.asarray(weights, np.float64)
+    w = w / max(float(w.sum()), 1e-12)
+    return jax.tree_util.tree_map(
+        lambda *xs: sum(float(wi) * x for wi, x in zip(w, xs)), *trees)
+
+
+def tier_contextual(stacked_updates: Pytree, grad_tree: Pytree,
+                    solve_cfg: SolveConfig,
+                    gram_scope: Optional[str] = None
+                    ) -> Tuple[Pytree, jax.Array, jax.Array, jax.Array,
+                               Dict[str, jax.Array]]:
+    """One tier's contextual solve: ``(ū, α, G, c, info)`` from stacked
+    member updates and the tier's gradient estimate."""
+    from ..core.aggregation import _stacked_to_matrix
+    U = _stacked_to_matrix(stacked_updates, gram_scope)
+    g = scope_vector(grad_tree, gram_scope)
+    G, c = gram_and_cross(U, g)
+    alpha = solve_alpha(G, c, solve_cfg)
+    u_bar = stacked_weighted_sum(stacked_updates, alpha)
+    beta = solve_cfg.beta
+    info = {
+        "bound": bound_value(G, c, alpha, beta),
+        "theorem1_reduction": theorem1_reduction(G, alpha, beta),
+        "stationarity_residual": jnp.linalg.norm(
+            gram_residual(G, c, alpha, beta)),
+    }
+    return u_bar, alpha, G, c, info
+
+
+def tier_mean(stacked_updates: Pytree, counts: np.ndarray
+              ) -> Tuple[Pytree, jax.Array]:
+    """Count-weighted mean — the hier-FedAvg tier rule.  Weighting by the
+    number of devices under each member makes the composition exact: the
+    cloud's result equals flat FedAvg over all participants."""
+    w = jnp.asarray(counts, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    return stacked_weighted_sum(stacked_updates, w), w
+
+
+def summarize_updates(node_id: int, member_ids: Sequence[int],
+                      updates: Sequence[Pytree], grads: Sequence[Pytree],
+                      counts: Sequence[int], solve_cfg: SolveConfig,
+                      mode: str = "contextual",
+                      gram_scope: Optional[str] = None,
+                      solve_grad: Optional[Pytree] = None) -> GatewaySummary:
+    """Aggregate one node's member updates into its upstream summary.
+
+    ``updates[i]`` is member i's update (a raw device Δ at tier 1, a child's
+    ū above), ``grads[i]`` its subtree gradient estimate, ``counts[i]`` the
+    devices it speaks for.  ``mode``: "contextual" (tier-local solve) or
+    "mean" (count-weighted FedAvg tier rule).
+
+    ``solve_grad`` is the gradient the c-term is computed against; default is
+    this subtree's own estimate.  The hierarchical runtime's gradient
+    pre-pass supplies the round's *global* ĝ here — a gateway cohort is a
+    skewed sample of the fleet, and optimizing the bound against a skewed
+    ∇f estimate misweights the whole cohort in a way the parent's γ rescale
+    cannot repair (it scales the cohort jointly).
+    """
+    if not updates:
+        raise ValueError(f"node {node_id}: cannot summarize zero updates")
+    counts = np.asarray(counts, np.int64)
+    stacked = _stack_trees(updates)
+    grad_est = weighted_mean_trees(grads, counts)
+    if mode == "contextual":
+        u_bar, alpha, G, c, info = tier_contextual(
+            stacked, grad_est if solve_grad is None else solve_grad,
+            solve_cfg, gram_scope)
+    elif mode == "mean":
+        u_bar, alpha = tier_mean(stacked, counts)
+        from ..core.aggregation import _stacked_to_matrix
+        U = _stacked_to_matrix(stacked, gram_scope)
+        G, c = gram_and_cross(U, scope_vector(grad_est, gram_scope))
+        info = {"bound": bound_value(G, c, alpha, solve_cfg.beta)}
+    else:
+        raise KeyError(f"unknown tier mode '{mode}' (contextual|mean)")
+    return GatewaySummary(
+        node_id=node_id, num_updates=int(counts.sum()),
+        member_ids=np.asarray(list(member_ids), np.int64),
+        G=G, c=c, alpha=alpha, u_bar=u_bar, grad_est=grad_est, info=info)
+
+
+def merge_summaries(node_id: int, children: Sequence[GatewaySummary],
+                    solve_cfg: SolveConfig, mode: str = "contextual",
+                    gram_scope: Optional[str] = None,
+                    solve_grad: Optional[Pytree] = None) -> GatewaySummary:
+    """Compose child summaries one tier up (regional / cloud stage): the
+    children's ū vectors become this node's member updates.
+
+    Parent-tier solves conserve mass (``sum_to=1``): each child combination
+    already carries its own 1/β calibration, and the restricted span of P
+    combinations systematically underprices alignment, so an unconstrained
+    solve shrinks the aggregate step round after round.  Constrained, the
+    tier only *reallocates* weight across children — every corner γ = e_g is
+    feasible, so the merged bound is never worse than promoting any single
+    child's combination unchanged."""
+    from dataclasses import replace as _replace
+    return summarize_updates(
+        node_id, [s.node_id for s in children],
+        [s.u_bar for s in children], [s.grad_est for s in children],
+        [s.num_updates for s in children],
+        _replace(solve_cfg, sum_to=1.0), mode, gram_scope, solve_grad)

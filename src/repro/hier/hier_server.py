@@ -1,0 +1,183 @@
+"""Cloud-side aggregation over gateway summaries + hierarchical baselines.
+
+The cloud never sees a raw device update (except in relay mode): it receives
+one :class:`~repro.hier.gateway.GatewaySummary` per reporting top-tier child
+and solves the P×P contextual system over their combined updates,
+
+    G₂ = [⟨ū_g, ū_h⟩],   c₂ = [⟨ū_g, ĝ⟩],   γ* = −(1/β) G₂⁺ c₂,
+
+then applies ``w ← w + Σ_g γ_g ū_g``.  Block-wise this is the full-fleet K×K
+solve restricted to ``α_k = γ_g α_{g,k}`` — the diagonal blocks (G_g, c_g)
+arrive inside the summaries and back the block-diagonal bound diagnostics
+(:func:`blockdiag_diagnostics`; the exact flat reassembly they support is
+``core.gram.merge_gram_blocks``, tested against the flat reductions), while
+the γ stage's Theorem-1 reduction ``(β/2) γᵀG₂γ`` is *exact* for the final
+combined update.
+
+Three strategies are registered in ``core.aggregation`` (same calling
+convention as every other aggregator; the stacked leading axis is the
+top-tier children instead of devices):
+
+  * ``hier_contextual`` — contextual solve at every tier (this module's γ
+    stage at the cloud, ``gateway.tier_contextual`` below it).
+  * ``hier_fedavg``     — count-weighted mean at every tier; composes to
+    exactly flat FedAvg over all participants (tested).
+  * ``hier_relay``      — summary-free baseline: gateways forward raw
+    updates, the cloud runs the flat contextual solve.  Same loss as flat,
+    full O(K·n) cloud uplink — the byte-accounting comparator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.aggregation import (AggregatorConfig, aggregate,
+                                aggregate_contextual, aggregate_fedavg,
+                                register_aggregator)
+from ..core.solve import SolveConfig, bound_value, theorem1_reduction
+from .gateway import GatewaySummary
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# registry entries (cloud stage, standard aggregator signature)
+# ---------------------------------------------------------------------------
+
+def aggregate_hier_contextual(params: Pytree, stacked_updates: Pytree,
+                              grad_tree: Pytree, cfg: AggregatorConfig
+                              ) -> Tuple[Pytree, Dict[str, jax.Array]]:
+    """Cloud γ-solve over stacked child combinations (the P×P stage).  The
+    math is the paper's contextual solve — registered under its own name so
+    configs state the tier structure explicitly and the info dict carries
+    ``gamma``."""
+    new, info = aggregate_contextual(params, stacked_updates, grad_tree, cfg)
+    info = dict(info)
+    info["gamma"] = info["alpha"]
+    return new, info
+
+
+def aggregate_hier_fedavg(params: Pytree, stacked_updates: Pytree,
+                          grad_tree: Optional[Pytree], cfg: AggregatorConfig
+                          ) -> Tuple[Pytree, Dict[str, jax.Array]]:
+    """Count-weighted mean of child combinations (weights via
+    ``cfg.client_weights`` = devices under each child)."""
+    return aggregate_fedavg(params, stacked_updates, grad_tree, cfg)
+
+
+register_aggregator("hier_contextual", aggregate_hier_contextual)
+register_aggregator("hier_fedavg", aggregate_hier_fedavg)
+register_aggregator("hier_relay", aggregate_contextual)
+
+
+# ---------------------------------------------------------------------------
+# summary-level cloud apply (what run_hier_simulation drives)
+# ---------------------------------------------------------------------------
+
+def cloud_aggregate(params: Pytree, stacked_members: Pytree,
+                    grad_est: Pytree, member_counts: Sequence[int],
+                    cfg: "HierConfig", combos: bool = True
+                    ) -> Tuple[Pytree, Dict[str, Any]]:
+    """Final tier, routed through the ``core.aggregation`` registry.
+
+    ``stacked_members`` stacks the cloud's direct children along the leading
+    axis — gateway/regional ū trees in summary mode (``combos=True``), raw
+    device updates for a star topology or relay mode (``combos=False``); the
+    same registry entry covers both because the γ stage *is* the paper's
+    solve one level up.  Over combos the solve conserves mass (Σγ = 1, see
+    :func:`repro.hier.gateway.merge_summaries`); over raw updates it is the
+    paper's unconstrained solve — the members carry no 1/β calibration yet.
+    """
+    solve = cfg.solve_config()
+    if combos:
+        solve = replace(solve, sum_to=1.0)
+    weights = None
+    if cfg.aggregator == "hier_fedavg":
+        weights = jnp.asarray(list(member_counts), jnp.float32)
+    agg_cfg = AggregatorConfig(name=cfg.aggregator, solve=solve,
+                               gram_scope=cfg.gram_scope,
+                               client_weights=weights)
+    new_params, info = aggregate(cfg.aggregator)(params, stacked_members,
+                                                 grad_est, agg_cfg)
+    info = dict(info)
+    info.setdefault("gamma", info["alpha"])
+    return new_params, info
+
+
+def blockdiag_diagnostics(summaries: Sequence[GatewaySummary],
+                          gamma: jax.Array, beta: float) -> Dict[str, Any]:
+    """Block-wise view of the induced device-level solve.
+
+    The effective full-fleet weights are ``α_k = γ_g α_{g,k}``; stacking the
+    shipped diagonal blocks (the cross-gateway blocks are exactly what the
+    hierarchy elides — zero in this view) prices that α under the
+    block-diagonal Gram, giving the cloud a full-fleet bound estimate
+    without ever seeing a raw update.
+    """
+    G_blockdiag = jax.scipy.linalg.block_diag(*[s.G for s in summaries])
+    c_full = jnp.concatenate([s.c for s in summaries])
+    alpha_full = jnp.concatenate(
+        [gamma[g] * s.alpha for g, s in enumerate(summaries)])
+    return {
+        "alpha_effective": alpha_full,
+        "blockdiag_bound": bound_value(G_blockdiag, c_full, alpha_full, beta),
+        "tier1_theorem1_reductions": jnp.stack(
+            [theorem1_reduction(s.G, s.alpha, beta) for s in summaries]),
+        "devices_represented": int(sum(s.num_updates for s in summaries)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# hierarchical run configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HierConfig:
+    """Configuration of a hierarchical run (mirrors ``ServerConfig`` /
+    ``AsyncConfig`` where concepts coincide)."""
+    aggregator: str = "hier_contextual"  # hier_contextual | hier_fedavg | hier_relay
+    fan_in: Optional[int] = None         # devices sampled per gateway per
+                                         # round (None → every child)
+    gateway_grad: str = "local"          # gradient the gateway solves price
+                                         # the c-term against: "local" (each
+                                         # subtree's own ĝ — composes best
+                                         # empirically; the γ stage handles
+                                         # cross-cohort skew) or "global"
+                                         # (gradient pre-pass: same uplink
+                                         # bytes, +2 backhaul hops latency)
+    lr: float = 0.03                     # client learning rate l
+    beta: Optional[float] = None         # None → paper's β = 1/l
+    mu: float = 0.0                      # FedProx proximal coefficient
+    batch_size: int = 32
+    min_epochs: int = 1                  # per-round epoch draw ~ U[min,max]
+    max_epochs: int = 20
+    gram_scope: Optional[str] = None
+    ridge: float = 1e-6
+
+    def __post_init__(self):
+        if self.aggregator not in ("hier_contextual", "hier_fedavg",
+                                   "hier_relay"):
+            raise ValueError(f"unknown hier aggregator '{self.aggregator}' "
+                             "(hier_contextual|hier_fedavg|hier_relay)")
+        if self.fan_in is not None and self.fan_in < 1:
+            raise ValueError(f"fan_in must be >= 1 (or None for all "
+                             f"children), got {self.fan_in}")
+        if self.gateway_grad not in ("global", "local"):
+            raise ValueError(f"gateway_grad must be 'global' or 'local', "
+                             f"got '{self.gateway_grad}'")
+
+    @property
+    def smoothness(self) -> float:
+        return self.beta if self.beta is not None else 1.0 / self.lr
+
+    @property
+    def tier_mode(self) -> str:
+        """Per-tier rule below the cloud: contextual solves everywhere except
+        the hier-FedAvg baseline's count-weighted means."""
+        return "mean" if self.aggregator == "hier_fedavg" else "contextual"
+
+    def solve_config(self) -> SolveConfig:
+        return SolveConfig(beta=self.smoothness, ridge=self.ridge)

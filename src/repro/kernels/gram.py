@@ -41,6 +41,65 @@ def _gram_kernel(u_ref, g_ref, G_ref, c_ref):
         u, g, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
 
 
+def _gram_block_kernel(ua_ref, ub_ref, g_ref, G_ref, c_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        G_ref[...] = jnp.zeros_like(G_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    ua = ua_ref[...].astype(jnp.float32)          # (Ka, bn)
+    ub = ub_ref[...].astype(jnp.float32)          # (Kb, bn)
+    g = g_ref[...].astype(jnp.float32)            # (1, bn)
+    G_ref[...] += jax.lax.dot_general(
+        ua, ub, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    c_ref[...] += jax.lax.dot_general(
+        ua, g, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gram_block_pallas(ua: jax.Array, ub: jax.Array, grad: jax.Array, *,
+                      block_n: int = 2048, interpret: bool = True):
+    """One Gram block for the hierarchical merge (``repro.hier``):
+
+        G_ab = U_a U_bᵀ (Ka, Kb)   and   c_a = U_a g (Ka,)
+
+    in a single streaming pass over the shared parameter axis — the two
+    operand tiles ride the same HBM→VMEM stream, so merging P gateway
+    groups reads each U_g ~P/2 times instead of P times with separate
+    contractions.  Row/column counts are padded to the 8-sublane boundary
+    independently (gateway cohorts are rarely MXU-aligned)."""
+    Ka, n = ua.shape
+    Kb, nb = ub.shape
+    if n != nb:
+        raise ValueError(f"block operands disagree on n: {n} vs {nb}")
+    padA, padB, padN = (-Ka) % 8, (-Kb) % 8, (-n) % block_n
+    a = jnp.pad(ua, ((0, padA), (0, padN)))
+    b = jnp.pad(ub, ((0, padB), (0, padN)))
+    g = jnp.pad(grad, (0, padN)).reshape(1, n + padN)
+    Kap, Kbp = Ka + padA, Kb + padB
+
+    grid = ((n + padN) // block_n,)
+    G, c = pl.pallas_call(
+        _gram_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Kap, block_n), lambda i: (0, i)),
+            pl.BlockSpec((Kbp, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Kap, Kbp), lambda i: (0, 0)),
+            pl.BlockSpec((Kap, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Kap, Kbp), jnp.float32),
+            jax.ShapeDtypeStruct((Kap, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, g)
+    return G[:Ka, :Kb], c[:Ka, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def gram_pallas(updates: jax.Array, grad: jax.Array, *, block_n: int = 2048,
                 interpret: bool = True):

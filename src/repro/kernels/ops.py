@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from . import ref
 from .combine import combine_pallas
 from .decode_attn import flash_decode_pallas
-from .gram import gram_pallas
+from .gram import gram_block_pallas, gram_pallas
 
 
 def on_tpu() -> bool:
@@ -32,6 +32,18 @@ def gram_and_cross(updates: jax.Array, grad: jax.Array, *,
         return gram_pallas(updates, grad, block_n=block_n,
                            interpret=not on_tpu())
     return ref.gram_ref(updates, grad)
+
+
+def gram_block_and_cross(ua: jax.Array, ub: jax.Array, grad: jax.Array, *,
+                         use_pallas: Optional[bool] = None,
+                         block_n: int = 2048) -> Tuple[jax.Array, jax.Array]:
+    """One fused hierarchical-merge block: G_ab = U_a U_bᵀ AND c_a = U_a g
+    (named apart from ``core.gram.gram_block``, which returns G alone)."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas or not on_tpu():
+        return gram_block_pallas(ua, ub, grad, block_n=block_n,
+                                 interpret=not on_tpu())
+    return ref.gram_block_ref(ua, ub, grad)
 
 
 def weighted_combine(params_vec: jax.Array, updates: jax.Array,

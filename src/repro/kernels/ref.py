@@ -14,6 +14,13 @@ def gram_ref(updates: jax.Array, grad: jax.Array):
     return u @ u.T, u @ g
 
 
+def gram_block_ref(ua: jax.Array, ub: jax.Array, grad: jax.Array):
+    """(G_ab, c_a) in f32 — oracle for kernels.gram.gram_block_pallas."""
+    a = ua.astype(jnp.float32)
+    b = ub.astype(jnp.float32)
+    return a @ b.T, a @ grad.astype(jnp.float32)
+
+
 def combine_ref(params_vec: jax.Array, updates: jax.Array,
                 alpha: jax.Array) -> jax.Array:
     """w + Σ α_k U_k — oracle for kernels.combine."""

@@ -83,7 +83,7 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
-    cost = compiled.cost_analysis() or {}
+    cost = hlo_analysis.cost_analysis_dict(compiled)
     try:
         mem = compiled.memory_analysis()
         mem_rec = {k: int(getattr(mem, k)) for k in

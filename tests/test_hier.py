@@ -1,0 +1,364 @@
+"""Tests for the hierarchical aggregation subsystem (repro.hier): Gram block
+composition against the flat reductions on every execution path, topology
+validation, summary composability/exactness, the mass-conserving parent-tier
+solve, and the multi-hop simulation end to end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SolveConfig, available_aggregators,
+                        blockwise_gram_and_cross, gram_and_cross,
+                        gram_and_cross_chunked, gram_block,
+                        gram_block_chunked, merge_gram_blocks, solve_alpha)
+from repro.core.flatten import tree_to_vector
+from repro.data.federated import FederatedDataset
+from repro.edge import bimodal_fleet, uniform_fleet
+from repro.fl import run_hier_simulation
+from repro.hier import (HierConfig, Link, get_topology,
+                        geo_partitioned_topology, merge_summaries,
+                        star_topology, summarize_updates, summary_bytes,
+                        two_tier_topology, update_bytes)
+from repro.kernels import ops
+from repro.kernels.gram import gram_block_pallas
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.models.logistic import logistic_apply, logistic_loss
+
+import repro.hier.hier_server  # noqa: F401  (registers hier aggregators)
+
+
+# ---------------------------------------------------------------------------
+# Gram block composition (satellite): merged per-gateway blocks == flat
+# ---------------------------------------------------------------------------
+
+def _split(U, sizes):
+    out, o = [], 0
+    for s in sizes:
+        out.append(U[o:o + s])
+        o += s
+    return out
+
+
+# K = 13 with uneven groups: neither K nor any group is a multiple of the
+# 8-sublane pad, exercising the padding paths.
+@pytest.mark.parametrize("sizes", [(4, 5, 4), (1, 12), (13,), (3, 3, 3, 4)])
+def test_block_merge_equals_flat_jnp(sizes):
+    key = jax.random.PRNGKey(sum(sizes))
+    U = jax.random.normal(key, (13, 700))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (700,))
+    Gf, cf = gram_and_cross(U, g)
+    Gm, cm = blockwise_gram_and_cross(_split(U, sizes), g)
+    np.testing.assert_allclose(np.asarray(Gm), np.asarray(Gf), rtol=1e-5,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cm), np.asarray(cf), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_block_merge_equals_flat_chunked():
+    key = jax.random.PRNGKey(7)
+    U = jax.random.normal(key, (11, 900))      # n not a chunk multiple
+    g = jax.random.normal(jax.random.fold_in(key, 1), (900,))
+    Gf, cf = gram_and_cross(U, g)
+    Gm, cm = blockwise_gram_and_cross(
+        _split(U, (4, 3, 4)), g,
+        diag_fn=lambda u, gr: gram_and_cross_chunked(u, gr, chunk=256),
+        block_fn=lambda a, b: gram_block_chunked(a, b, chunk=256))
+    np.testing.assert_allclose(np.asarray(Gm), np.asarray(Gf), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cm), np.asarray(cf), atol=1e-4)
+
+
+def test_block_merge_equals_flat_pallas():
+    from repro.kernels.gram import gram_pallas
+    key = jax.random.PRNGKey(11)
+    U = jax.random.normal(key, (13, 500))      # K=13: sublane pad in kernel
+    g = jax.random.normal(jax.random.fold_in(key, 1), (500,))
+    Gf, cf = gram_and_cross(U, g)
+    Gm, cm = blockwise_gram_and_cross(
+        _split(U, (5, 4, 4)), g,
+        diag_fn=lambda u, gr: gram_pallas(u, gr, block_n=128, interpret=True),
+        block_fn=lambda a, b: gram_block_pallas(a, b, g, block_n=128,
+                                                interpret=True)[0])
+    np.testing.assert_allclose(np.asarray(Gm), np.asarray(Gf), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cm), np.asarray(cf), atol=1e-3)
+
+
+def test_gram_block_pallas_matches_ref_and_ops_dispatch():
+    key = jax.random.PRNGKey(3)
+    ua = jax.random.normal(key, (5, 333))
+    ub = jax.random.normal(jax.random.fold_in(key, 1), (7, 333))
+    g = jax.random.normal(jax.random.fold_in(key, 2), (333,))
+    Gp, cp = gram_block_pallas(ua, ub, g, block_n=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(Gp), np.asarray(ua @ ub.T),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cp), np.asarray(ua @ g), atol=1e-4)
+    Gd, cd = ops.gram_block_and_cross(ua, ub, g, block_n=128)
+    np.testing.assert_allclose(np.asarray(Gd), np.asarray(Gp), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cd), np.asarray(cp), atol=1e-5)
+
+
+def test_merge_gram_blocks_validates_segment_count():
+    with pytest.raises(ValueError, match="cross-term"):
+        merge_gram_blocks([jnp.eye(2)], {}, [])
+
+
+# ---------------------------------------------------------------------------
+# topologies
+# ---------------------------------------------------------------------------
+
+def test_topology_builders_shapes_and_helpers():
+    fleet = uniform_fleet(12)
+    star = star_topology(fleet)
+    assert star.depth == 1 and star.gateways[0].node_id == star.cloud_id
+    two = two_tier_topology(fleet, 3)
+    assert two.depth == 2 and len(two.gateways) == 3
+    assert sorted(sum((two.devices_under(g.node_id) for g in two.gateways),
+                      [])) == list(range(12))
+    geo = geo_partitioned_topology(fleet, 2, 2)
+    assert geo.depth == 3 and len(geo.gateways) == 4
+    assert len(geo.tier_nodes(2)) == 2
+    assert geo.devices_under(geo.cloud_id) == list(range(12))
+    assert "depth=3" in geo.describe()
+
+
+def test_topology_validation_rejects_bad_trees():
+    fleet = uniform_fleet(4)
+    with pytest.raises(ValueError, match="num_gateways"):
+        two_tier_topology(fleet, 9)
+    with pytest.raises(ValueError, match="bandwidth"):
+        Link(0.0, 1.0)
+    with pytest.raises(KeyError):
+        get_topology("nope", 8)
+    assert get_topology("two_tier_bimodal", 8, num_gateways=2).depth == 2
+    assert get_topology("star", 6).num_devices == 6
+    assert get_topology("geo", 8).depth == 3
+
+
+def test_link_transfer_times():
+    link = Link(1e6, 2e6, latency=0.5)
+    assert link.uplink_time(1e6) == pytest.approx(1.5)
+    assert link.downlink_time(1e6) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# summaries: composability + exactness of the two-stage solve
+# ---------------------------------------------------------------------------
+
+def _toy(key, K=8, dim=30, classes=3):
+    k1, k2 = jax.random.split(key)
+    updates = [{"w": jax.random.normal(jax.random.fold_in(k1, i),
+                                       (dim, classes)) * 0.1}
+               for i in range(K)]
+    grads = [{"w": jax.random.normal(jax.random.fold_in(k2, i),
+                                     (dim, classes)) * 0.1}
+             for i in range(K)]
+    return updates, grads
+
+
+def test_single_gateway_hier_equals_flat_exactly():
+    """One gateway holding the whole cohort: the gateway solve IS the flat
+    solve, and the mass-conserving cloud stage must return γ = 1 exactly."""
+    updates, grads = _toy(jax.random.PRNGKey(0))
+    cfg = SolveConfig(beta=4.0, ridge=1e-8)
+    s = summarize_updates(100, range(8), updates, grads, [1] * 8, cfg)
+    top = merge_summaries(101, [s], cfg)
+    np.testing.assert_allclose(np.asarray(top.alpha), [1.0], atol=1e-5)
+    # flat solve over the same members
+    U = jnp.stack([tree_to_vector(u) for u in updates])
+    g = tree_to_vector(jax.tree_util.tree_map(
+        lambda *xs: sum(xs) / len(xs), *grads))
+    G, c = gram_and_cross(U, g)
+    alpha_flat = solve_alpha(G, c, cfg)
+    np.testing.assert_allclose(np.asarray(s.alpha), np.asarray(alpha_flat),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(top.u_bar["w"]),
+                               np.asarray(s.u_bar["w"]), rtol=1e-5)
+
+
+def test_summary_composes_recursively_and_conserves_counts():
+    updates, grads = _toy(jax.random.PRNGKey(1), K=9)
+    cfg = SolveConfig(beta=4.0)
+    s1 = summarize_updates(100, range(3), updates[:3], grads[:3], [1] * 3, cfg)
+    s2 = summarize_updates(101, range(3, 6), updates[3:6], grads[3:6],
+                           [1] * 3, cfg)
+    s3 = summarize_updates(102, range(6, 9), updates[6:], grads[6:],
+                           [1] * 3, cfg)
+    regional = merge_summaries(200, [s1, s2], cfg)
+    assert regional.num_updates == 6
+    top = merge_summaries(300, [regional, s3], cfg)
+    assert top.num_updates == 9
+    # parent-tier solves conserve mass
+    assert float(jnp.sum(regional.alpha)) == pytest.approx(1.0, abs=1e-5)
+    assert float(jnp.sum(top.alpha)) == pytest.approx(1.0, abs=1e-5)
+    assert np.isfinite(np.asarray(top.u_bar["w"])).all()
+
+
+def test_hier_fedavg_tier_rule_composes_to_flat_mean():
+    updates, grads = _toy(jax.random.PRNGKey(2), K=6)
+    cfg = SolveConfig(beta=4.0)
+    s1 = summarize_updates(100, range(4), updates[:4], grads[:4], [1] * 4,
+                           cfg, mode="mean")
+    s2 = summarize_updates(101, range(4, 6), updates[4:], grads[4:], [1] * 2,
+                           cfg, mode="mean")
+    top = merge_summaries(200, [s1, s2], cfg, mode="mean")
+    flat_mean = np.mean(np.stack([np.asarray(u["w"]) for u in updates]), 0)
+    np.testing.assert_allclose(np.asarray(top.u_bar["w"]), flat_mean,
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_summarize_rejects_empty_and_bad_mode():
+    cfg = SolveConfig(beta=4.0)
+    with pytest.raises(ValueError, match="zero updates"):
+        summarize_updates(1, [], [], [], [], cfg)
+    updates, grads = _toy(jax.random.PRNGKey(3), K=2)
+    with pytest.raises(KeyError, match="tier mode"):
+        summarize_updates(1, [0, 1], updates, grads, [1, 1], cfg, mode="bogus")
+
+
+def test_mass_conserving_solve_beats_any_single_child_on_bound():
+    """Σγ=1 keeps every corner e_g feasible, so the constrained cloud bound
+    must be ≤ the bound of promoting any single child's combination."""
+    from repro.core.solve import bound_value
+    key = jax.random.PRNGKey(5)
+    Ub = jax.random.normal(key, (4, 50))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (50,))
+    G2, c2 = gram_and_cross(Ub, g)
+    beta = 3.0
+    gamma = solve_alpha(G2, c2, SolveConfig(beta=beta, ridge=1e-8,
+                                            sum_to=1.0))
+    assert float(jnp.sum(gamma)) == pytest.approx(1.0, abs=1e-5)
+    b_star = float(bound_value(G2, c2, gamma, beta))
+    for gidx in range(4):
+        corner = jnp.zeros((4,)).at[gidx].set(1.0)
+        assert b_star <= float(bound_value(G2, c2, corner, beta)) + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# registry + comm accounting
+# ---------------------------------------------------------------------------
+
+def test_hier_aggregators_registered():
+    names = available_aggregators()
+    for name in ("hier_contextual", "hier_fedavg", "hier_relay"):
+        assert name in names
+
+
+def test_summary_vs_update_bytes():
+    n, k = 10_000, 16
+    assert summary_bytes(k, n) < 2 * update_bytes(n)
+    assert summary_bytes(k, n, include_grad=True) == pytest.approx(
+        summary_bytes(k, n) + update_bytes(n))
+    # the whole point: one summary ≪ forwarding k raw updates
+    assert summary_bytes(k, n, include_grad=True) < 0.2 * k * update_bytes(n)
+
+
+def test_hier_config_validation():
+    with pytest.raises(ValueError, match="aggregator"):
+        HierConfig(aggregator="bogus")
+    with pytest.raises(ValueError, match="fan_in"):
+        HierConfig(fan_in=0)
+    with pytest.raises(ValueError, match="gateway_grad"):
+        HierConfig(gateway_grad="bogus")
+    assert HierConfig(lr=0.25).smoothness == pytest.approx(4.0)
+    assert HierConfig(aggregator="hier_fedavg").tier_mode == "mean"
+
+
+# ---------------------------------------------------------------------------
+# end-to-end simulation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_problem():
+    from repro.data import make_synthetic
+    dim, n_dev = 20, 12
+    xs, ys = make_synthetic(1.0, 1.0, num_devices=n_dev, samples_per_device=30,
+                            dim=dim, seed=5)
+    ds = FederatedDataset(xs, ys, np.ones(ys.shape, np.float32),
+                          xs.reshape(-1, dim)[:150], ys.reshape(-1)[:150], 10)
+    model = get_model(ArchConfig(name="lr", family="logreg", input_dim=dim,
+                                 num_classes=10))
+    return ds, model.init(jax.random.PRNGKey(0))
+
+
+def _hier(ds, params, topo, seed=11, rounds=5, **kw):
+    base = dict(aggregator="hier_contextual", lr=0.2, batch_size=10,
+                min_epochs=1, max_epochs=4)
+    base.update(kw)
+    return run_hier_simulation("hier", logistic_loss, logistic_apply, params,
+                               ds, HierConfig(**base), topo,
+                               num_rounds=rounds, selection_seed=seed,
+                               eval_every=2)
+
+
+def test_hier_simulation_runs_and_is_deterministic(tiny_problem):
+    ds, params = tiny_problem
+    fleet = bimodal_fleet(12, slowdown=4.0, dropout_slow=0.2, seed=0)
+    topo = two_tier_topology(fleet, 3)
+    r1 = _hier(ds, params, topo)
+    r2 = _hier(ds, params, topo)
+    assert r1.times == r2.times
+    assert r1.train_loss == r2.train_loss
+    assert np.isfinite(r1.train_loss).all()
+    assert all(b >= a for a, b in zip(r1.times, r1.times[1:]))
+    assert r1.arrived + r1.dropped == r1.dispatched - 0  # all rounds drained
+
+
+def test_hier_simulation_learns_and_saves_uplink(tiny_problem):
+    ds, params = tiny_problem
+    fleet = bimodal_fleet(12, slowdown=4.0, dropout_slow=0.0, seed=0)
+    flat = _hier(ds, params, star_topology(fleet), rounds=6)
+    hier = _hier(ds, params, two_tier_topology(fleet, 3), rounds=6)
+    assert hier.train_loss[-1] < hier.train_loss[0]
+    assert hier.cloud_uplink_bytes < flat.cloud_uplink_bytes
+    # per-tier ledger is populated for every tier of the tree
+    assert hier.comm["tier_2"]["bytes_up"] == hier.cloud_uplink_bytes
+    assert hier.comm["tier_1"]["bytes_up"] > 0
+    assert hier.comm["tier_1"]["bytes_down"] > 0
+
+
+def test_hier_relay_matches_flat_math(tiny_problem):
+    """Relay routes raw updates through the tree: same bytes as flat at the
+    cloud and the identical contextual result (the events are identical)."""
+    ds, params = tiny_problem
+    fleet = uniform_fleet(12, dropout=0.0, jitter=0.05)
+    flat = _hier(ds, params, star_topology(fleet), rounds=4)
+    relay = _hier(ds, params, two_tier_topology(fleet, 3), rounds=4,
+                  aggregator="hier_relay")
+    np.testing.assert_allclose(flat.train_loss, relay.train_loss, rtol=1e-5)
+    assert relay.cloud_uplink_bytes == pytest.approx(flat.cloud_uplink_bytes)
+
+
+def test_hier_fedavg_gateway_grad_and_fan_in(tiny_problem):
+    ds, params = tiny_problem
+    fleet = uniform_fleet(12, dropout=0.0)
+    topo = two_tier_topology(fleet, 3)
+    r = _hier(ds, params, topo, aggregator="hier_fedavg", fan_in=2)
+    assert np.isfinite(r.train_loss).all()
+    g = _hier(ds, params, topo, gateway_grad="global")
+    assert np.isfinite(g.train_loss).all()
+    # the pre-pass costs latency, not bytes: same cloud uplink either way
+    loc = _hier(ds, params, topo, gateway_grad="local")
+    assert g.cloud_uplink_bytes == pytest.approx(loc.cloud_uplink_bytes)
+    assert g.times[-1] > loc.times[-1]
+
+
+def test_hier_three_tier_geo(tiny_problem):
+    ds, params = tiny_problem
+    topo = geo_partitioned_topology(uniform_fleet(12, dropout=0.1), 2, 2)
+    r = _hier(ds, params, topo, rounds=4)
+    assert np.isfinite(r.train_loss).all()
+    assert r.comm["tier_3"]["bytes_up"] > 0          # regional → cloud
+    assert r.comm["tier_2"]["bytes_up"] > 0          # gateway → regional
+    assert r.rounds_skipped == 0
+    # gradient pre-pass through the regional tier: same bytes, more hops
+    g = _hier(ds, params, topo, rounds=4, gateway_grad="global")
+    assert np.isfinite(g.train_loss).all()
+    assert g.cloud_uplink_bytes == pytest.approx(r.cloud_uplink_bytes)
+    assert g.times[-1] > r.times[-1]
+
+
+def test_hier_simulation_rejects_small_dataset(tiny_problem):
+    ds, params = tiny_problem
+    topo = star_topology(uniform_fleet(50))
+    with pytest.raises(ValueError, match="device shards"):
+        _hier(ds, params, topo)

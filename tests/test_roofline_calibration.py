@@ -14,6 +14,7 @@ from jax import lax
 
 from repro.configs import get_config
 from repro.launch.analytic import model_forward_flops
+from repro.launch.hlo_analysis import cost_analysis_dict
 from repro.launch.shapes import InputShape
 from repro.models import get_model
 
@@ -30,7 +31,8 @@ def test_cost_analysis_is_scan_trip_invariant():
     for L in (1, 4):
         w = jax.ShapeDtypeStruct((L, 128, 128), jnp.float32)
         x = jax.ShapeDtypeStruct((4, 128), jnp.float32)
-        costs[L] = jax.jit(f).lower(w, x).compile().cost_analysis()["flops"]
+        costs[L] = cost_analysis_dict(
+            jax.jit(f).lower(w, x).compile())["flops"]
     assert costs[1] == pytest.approx(costs[4], rel=0.01), costs
 
 
@@ -46,7 +48,7 @@ def _artifact_flops(cfg, B, S):
         return bundle.train_loss(p, b)[0]
 
     compiled = jax.jit(fwd_loss).lower(params, batch).compile()
-    return float(compiled.cost_analysis()["flops"])
+    return float(cost_analysis_dict(compiled)["flops"])
 
 
 CAL_CASES = [
