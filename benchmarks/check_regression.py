@@ -1,0 +1,142 @@
+"""Bench-regression gate: diff fresh BENCH_*.json against committed baselines.
+
+Stdlib-only (runs before/without the repro package) so CI can invoke it as a
+plain script:
+
+    python benchmarks/check_regression.py --baseline bench-baseline --fresh .
+
+Compares every ``BENCH_*.json`` present in the baseline dir against its
+freshly generated twin.  Records are matched by their identity keys (the
+non-numeric fields plus declared config numbers like ``ratio``); metrics are
+classed by name:
+
+  * byte counts and savings ratios — deterministic accounting, compared
+    near-exactly (they are THE regression signal: a wire-format or ledger
+    change shows up here first);
+  * losses / accuracies / virtual times — deterministic per platform but
+    float-sensitive across jax versions and BLAS backends, compared within a
+    generous relative band;
+  * real wall-clock fields — ignored (machine-dependent).
+
+A missing fresh file, a missing record, a new NaN, or any out-of-band
+metric fails the gate (exit 1) with a per-field report.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+
+# metric classification by field-name substring (first match wins)
+IGNORE = ("round_time_s", "wall_time", "us_per_call", "time_end")
+EXACT = ("bytes", "savings", "gateways", "devices", "rounds", "num_",
+         "meets_")
+LOOSE_REL = 0.35        # losses / accs / virtual times across jax versions
+LOOSE_ABS = 0.05
+EXACT_REL = 1e-6
+
+
+def _identity(record: dict) -> tuple:
+    parts = []
+    for key in sorted(record):
+        val = record[key]
+        if isinstance(val, str):
+            parts.append((key, val))
+        elif key in ("ratio", "u_frac", "depth", "gateways",
+                     "fleet_slowdown", "target_acc"):
+            parts.append((key, val))
+    return tuple(parts)
+
+
+def _classify(key: str):
+    for pat in IGNORE:
+        if pat in key:
+            return None
+    for pat in EXACT:
+        if pat in key:
+            return EXACT_REL, 0.0
+    return LOOSE_REL, LOOSE_ABS
+
+
+def _check_value(path: str, key: str, old, new, problems: list) -> None:
+    if isinstance(old, str) or isinstance(old, bool) or old is None:
+        if old != new:
+            problems.append(f"{path}.{key}: '{old}' -> '{new}'")
+        return
+    if not isinstance(old, (int, float)):
+        return
+    band = _classify(key)
+    if band is None:
+        return
+    rel, abs_tol = band
+    if new is None or (isinstance(new, float) and math.isnan(new)):
+        problems.append(f"{path}.{key}: {old} -> {new}")
+        return
+    tol = max(abs(old) * rel, abs_tol)
+    if abs(float(new) - float(old)) > tol:
+        problems.append(f"{path}.{key}: {old} -> {new} (tol {tol:.3g})")
+
+
+def _check_records(name: str, old: list, new: list, problems: list) -> None:
+    fresh = {_identity(r): r for r in new}
+    for rec in old:
+        ident = _identity(rec)
+        twin = fresh.get(ident)
+        if twin is None:
+            problems.append(f"{name}: record {dict(ident)} missing from "
+                            "fresh run")
+            continue
+        for key, val in rec.items():
+            _check_value(f"{name}:{dict(ident).get('method', ident)}",
+                         key, val, twin.get(key), problems)
+
+
+def compare(baseline_path: str, fresh_path: str, problems: list) -> None:
+    name = os.path.basename(baseline_path)
+    if not os.path.exists(fresh_path):
+        problems.append(f"{name}: fresh file missing (bench did not run?)")
+        return
+    with open(baseline_path) as f:
+        old = json.load(f)
+    with open(fresh_path) as f:
+        new = json.load(f)
+    for key, val in old.items():
+        if key == "records":
+            _check_records(name, val, new.get("records", []), problems)
+        elif isinstance(val, dict):        # e.g. compress acceptance block
+            twin = new.get(key) or {}
+            for k2, v2 in val.items():
+                _check_value(f"{name}.{key}", k2, v2, twin.get(k2), problems)
+        else:
+            _check_value(name, key, val, new.get(key), problems)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="dir holding the committed BENCH_*.json")
+    ap.add_argument("--fresh", required=True,
+                    help="dir holding the freshly generated BENCH_*.json")
+    args = ap.parse_args()
+
+    baselines = sorted(glob.glob(os.path.join(args.baseline, "BENCH_*.json")))
+    if not baselines:
+        print(f"no BENCH_*.json under {args.baseline}", file=sys.stderr)
+        return 1
+    problems: list = []
+    for b in baselines:
+        compare(b, os.path.join(args.fresh, os.path.basename(b)), problems)
+    if problems:
+        print(f"bench regression gate: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"bench regression gate: {len(baselines)} file(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

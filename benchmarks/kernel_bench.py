@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.combine import combine_pallas
 from repro.kernels.gram import gram_pallas
+from repro.kernels.sketch import sketch_apply_pallas
+from repro.kernels.topk import topk_select_pallas
 
 from .common import emit, timeit
 
@@ -39,3 +41,23 @@ def run() -> None:
              f"bytes={(K + 2) * n * 4}")
         t_pal = timeit(lambda: combine_pallas(w, U, a, interpret=True), iters=3)
         emit(f"kernel/combine_pallas_interp/K{K}_n{n}", t_pal, "hbm_passes=1")
+
+    # summary-compression paths (repro.compress hot spots): stacked
+    # sketch-apply at a gateway-realistic m, and top-k selection
+    for K, n, m in ((8, 1 << 16, 1 << 10),):
+        U = jax.random.normal(key, (K, n), jnp.float32)
+        R = jax.random.normal(jax.random.fold_in(key, 4), (m, n), jnp.float32)
+        t_ref = timeit(lambda: ref.sketch_ref(U, R), iters=10)
+        emit(f"kernel/sketch_ref/K{K}_n{n}_m{m}", t_ref,
+             f"bytes={(K + m) * n * 4};out_floats={K * m}")
+        t_pal = timeit(lambda: sketch_apply_pallas(U, R, interpret=True),
+                       iters=3)
+        emit(f"kernel/sketch_pallas_interp/K{K}_n{n}_m{m}", t_pal,
+             "single_pass=1;batched_rows=1")
+        v, k = U[0], 512
+        t_ref = timeit(lambda: ref.topk_ref(v, k), iters=10)
+        emit(f"kernel/topk_ref/n{n}_k{k}", t_ref, f"bytes={n * 4}")
+        t_pal = timeit(lambda: topk_select_pallas(v, k, interpret=True),
+                       iters=3)
+        emit(f"kernel/topk_pallas_interp/n{n}_k{k}", t_pal,
+             "chunked_candidates=1")

@@ -21,9 +21,10 @@ import sys
 
 def _registry():
     """name -> (module, kwargs_fn(quick) -> run kwargs, emits_json)."""
-    from . import (async_vs_sync, fig2_3_k2_variants, fig4_5_algorithms,
-                   fig6_rounds_to_accuracy, fig7_alpha_stages, hier_vs_flat,
-                   kernel_bench, roofline_report)
+    from . import (async_vs_sync, compress_sweep, fig2_3_k2_variants,
+                   fig4_5_algorithms, fig6_rounds_to_accuracy,
+                   fig7_alpha_stages, hier_vs_flat, kernel_bench,
+                   roofline_report)
     return {
         "fig2_3": (fig2_3_k2_variants,
                    lambda q: dict(rounds=10 if q else 25), False),
@@ -37,6 +38,8 @@ def _registry():
                   lambda q: dict(rounds=12 if q else 30,
                                  aggs=12 if q else 30), True),
         "hier": (hier_vs_flat, lambda q: dict(rounds=8 if q else 20), True),
+        "compress": (compress_sweep,
+                     lambda q: dict(rounds=8 if q else 16), True),
         "kernels": (kernel_bench, lambda q: {}, False),
         "roofline": (roofline_report, lambda q: {}, False),
     }

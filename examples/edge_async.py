@@ -8,6 +8,8 @@ The table compares *virtual wall-clock* to reach accuracy targets — the only
 axis on which sync and async are commensurable.
 
   PYTHONPATH=src python examples/edge_async.py     (< 60 s on CPU)
+
+EXAMPLE_SMOKE=1 runs a tiny-step variant (CI keeps examples from rotting).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -25,8 +27,9 @@ from repro.models import get_model
 from repro.models.config import ArchConfig
 from repro.models.logistic import logistic_apply, logistic_loss
 
+SMOKE = os.environ.get("EXAMPLE_SMOKE", "") == "1"
 DIM, N_DEV, SEED = 60, 30, 42
-ROUNDS, AGGS, EVAL_EVERY = 40, 40, 2
+ROUNDS, AGGS, EVAL_EVERY = (6, 6, 2) if SMOKE else (40, 40, 2)
 TARGETS = (0.40, 0.50, 0.55)
 
 

@@ -9,6 +9,8 @@ gateway combinations.  The demo shows the hierarchy tracks the flat
 contextual loss (within 5%) while cutting cloud-uplink bytes ≥5×.
 
   PYTHONPATH=src python examples/edge_hier.py     (< 90 s on CPU)
+
+EXAMPLE_SMOKE=1 runs a tiny-step variant (CI keeps examples from rotting).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -25,8 +27,9 @@ from repro.models import get_model
 from repro.models.config import ArchConfig
 from repro.models.logistic import logistic_apply, logistic_loss
 
+SMOKE = os.environ.get("EXAMPLE_SMOKE", "") == "1"
 DIM, N_DEV, N_GW, SEED = 60, 64, 4, 42
-ROUNDS, EVAL_EVERY = 30, 2
+ROUNDS, EVAL_EVERY = (5, 2) if SMOKE else (30, 2)
 
 
 def main():

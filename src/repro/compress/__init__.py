@@ -1,0 +1,35 @@
+"""Sub-O(n) summary compression for the hierarchical uplink.
+
+A family of linear-sketch and selection compressors behind one
+:class:`Compressor` protocol, plus the per-sender error-feedback state that
+makes lossy uplinks convergent.  The hier runtime
+(:func:`repro.fl.run_hier_simulation` with ``HierConfig.compress`` set and
+the ``hier_contextual_sketch`` aggregator) ships gateway summaries through
+these — the cloud's P×P contextual solve runs on sketched cross-terms via
+:func:`payload_gram` and the combine applies the decoded updates, so the
+solve stays exactly consistent with what actually crossed the wire.
+
+Submodules:
+  * base           — protocol, payloads + wire-size accounting, identity
+                     scheme, :class:`CompressConfig` budget resolution
+  * sketch         — signed random projection and SRHT (linear, unbiased,
+                     sketch-space Gram)
+  * topk           — magnitude top-k masking (exact sparse decode)
+  * lowrank        — rank-r factored summaries (truncated SVD)
+  * error_feedback — per-sender residual state (telescoping-exact)
+"""
+from . import lowrank, sketch, topk  # noqa: F401  (register schemes)
+from .base import (Compressed, CompressConfig, Compressor,
+                   IdentityCompressor, available_schemes, payload_gram,
+                   register_scheme)
+from .error_feedback import ErrorFeedback
+from .lowrank import LowRankCompressor
+from .sketch import SignSketch, SRHTSketch, fwht
+from .topk import TopKCompressor
+
+__all__ = [
+    "Compressed", "CompressConfig", "Compressor", "IdentityCompressor",
+    "available_schemes", "payload_gram", "register_scheme",
+    "ErrorFeedback", "LowRankCompressor", "SignSketch", "SRHTSketch",
+    "fwht", "TopKCompressor",
+]

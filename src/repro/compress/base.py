@@ -1,0 +1,231 @@
+"""Compressor protocol for sub-O(n) gateway summaries (``repro.compress``).
+
+The hierarchical pipeline's remaining O(n) term is the gateway summary's
+(ū_g, ĝ_g) pair riding the backhaul at full model width.  Every scheme here
+is an *encoder/decoder pair over flat f32 vectors*:
+
+    comp  = compressor.encode(v, seed)      # what rides the wire
+    v_hat = compressor.decode(comp)         # what the receiver reconstructs
+
+with two structural properties the contextual algebra leans on:
+
+  * **Linear sketches** (``linear = True``: sign random projection, SRHT,
+    identity) are a matrix ``S (m, n)`` with ``E[SᵀS] = I`` — the scaling is
+    folded into S, so sketch-space inner products ``⟨S u, S v⟩`` are already
+    *distortion-corrected* unbiased estimates of ``⟨u, v⟩`` and the cloud's
+    P×P Gram stage can run entirely in sketch space
+    (:func:`payload_gram`, O(P²·m) instead of O(P²·n)).  Linearity also
+    means sketched gradient estimates combine exactly:
+    ``S(Σ w_h ĝ_h) = Σ w_h S ĝ_h``.
+  * **Non-linear selections** (top-k, low-rank) decode to the exact vector
+    the receiver applies, so Gram blocks computed on decodes are *exact* for
+    the applied updates (no correction needed — the bias lives in the
+    discarded residual, which error feedback re-injects next round,
+    see :mod:`repro.compress.error_feedback`).
+
+``CompressConfig.build(n)`` resolves a scheme + byte budget into a concrete
+compressor: ``ratio`` is the uplink byte-reduction target for one n-vector,
+so every scheme prices its own payload layout (top-k pays 2 words per kept
+entry, rank-r pays r·(rows+cols), sketches pay m).
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, replace as _dc_replace
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WIRE_BYTES = 4.0      # f32 values and i32 indices both ride as 4-byte words
+
+
+@dataclass
+class Compressed:
+    """One compressed vector as it rides the wire.
+
+    ``data`` holds the payload arrays (sketch coordinates, top-k values +
+    indices, low-rank factors); ``n`` the original length; ``seed`` whatever
+    the decoder needs to rebuild shared randomness (linear sketches
+    regenerate S from it — the matrix itself never travels)."""
+    scheme: str
+    n: int
+    data: Tuple[jax.Array, ...]
+    seed: int = 0
+
+    @property
+    def nbytes(self) -> float:
+        """Serialized wire size: every payload element is a 4-byte word."""
+        return WIRE_BYTES * sum(int(np.prod(d.shape)) for d in self.data)
+
+
+class Compressor(abc.ABC):
+    """One compression scheme (see module docstring for the contract)."""
+
+    name: str = "base"
+    linear: bool = False        # True ⇒ encode is v ↦ S v with E[SᵀS] = I
+
+    @abc.abstractmethod
+    def encode(self, vec: jax.Array, seed: int = 0) -> Compressed:
+        """Compress a flat f32 vector ``(n,)``."""
+
+    @abc.abstractmethod
+    def decode(self, comp: Compressed) -> jax.Array:
+        """Reconstruct the full-width estimate ``(n,)`` of the encoded vector."""
+
+    @abc.abstractmethod
+    def wire_floats(self, n: int) -> int:
+        """Payload size (4-byte words) for an ``n``-vector — must equal
+        ``encode(v).nbytes / 4`` for any ``v`` of that length (tested)."""
+
+    def dot(self, a: Compressed, b: Compressed) -> jax.Array:
+        """Distortion-corrected estimate of ``⟨u, v⟩`` from two payloads.
+
+        Linear sketches take it in sketch space (both operands must share
+        the same ``seed`` → same S); selection schemes fall back to the dot
+        of decodes, which is *exact* for the vectors the receiver applies.
+        """
+        if self.linear:
+            if a.seed != b.seed:
+                raise ValueError(f"sketch-space dot needs a shared sketch: "
+                                 f"seeds {a.seed} != {b.seed}")
+            return jnp.vdot(a.data[0], b.data[0])
+        return jnp.vdot(self.decode(a), self.decode(b))
+
+
+def payload_gram(compressor: Compressor, u_comps: Sequence[Compressed],
+                 g_comps: Sequence[Compressed], weights: np.ndarray
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """The cloud's sketched cross-terms: ``G₂[g,h] ≈ ⟨ū_g, ū_h⟩`` and
+    ``c₂[g] ≈ ⟨ū_g, ĝ⟩`` with ``ĝ = Σ w_h ĝ_h``, computed without ever
+    materializing an n-vector when the scheme is linear.
+
+    For linear sketches this is unbiased for the inner products of the
+    *encoded targets* (the correction for sketch distortion is folded into
+    S's scaling), while the combine applies their MMSE-*shrunk* decodes.
+    That is not an inconsistency: every child shrinks by the same factor s
+    (linear schemes share one S), so pricing the decodes would scale G₂ and
+    c₂ uniformly by s² — and the mass-conserving Σγ=1 KKT stage is exactly
+    invariant under that joint rescale (substitute λ → λ/s²; tested).  For
+    selection schemes the estimate is exact for the decoded updates
+    actually applied.
+    """
+    w = np.asarray(weights, np.float64)
+    w = w / max(float(w.sum()), 1e-12)
+    if compressor.linear:
+        seeds = {c.seed for c in list(u_comps) + list(g_comps)}
+        if len(seeds) != 1:
+            raise ValueError(f"sketch-space Gram needs one shared sketch "
+                             f"seed, got {sorted(seeds)}")
+        S = jnp.stack([c.data[0] for c in u_comps])          # (P, m)
+        sg = sum(float(wi) * c.data[0] for wi, c in zip(w, g_comps))
+    else:
+        S = jnp.stack([compressor.decode(c) for c in u_comps])   # (P, n)
+        sg = sum(float(wi) * compressor.decode(c)
+                 for wi, c in zip(w, g_comps))
+    return S @ S.T, S @ sg
+
+
+class IdentityCompressor(Compressor):
+    """No-op scheme (S = I): the exactness anchor — every pipeline claim
+    must collapse to the uncompressed run under it (tested)."""
+
+    name = "identity"
+    linear = True
+
+    def encode(self, vec: jax.Array, seed: int = 0) -> Compressed:
+        return Compressed("identity", int(vec.shape[0]),
+                          (jnp.asarray(vec, jnp.float32),), seed)
+
+    def decode(self, comp: Compressed) -> jax.Array:
+        return comp.data[0]
+
+    def wire_floats(self, n: int) -> int:
+        return n
+
+
+_SCHEMES: Dict[str, Callable[["CompressConfig", int], Compressor]] = {}
+
+
+def register_scheme(name: str, build: Callable[["CompressConfig", int],
+                                               Compressor]) -> None:
+    if name in _SCHEMES:
+        raise KeyError(f"compression scheme '{name}' already registered")
+    _SCHEMES[name] = build
+
+
+def available_schemes() -> Tuple[str, ...]:
+    return tuple(sorted(_SCHEMES))
+
+
+register_scheme("identity", lambda cfg, n: IdentityCompressor())
+
+
+@dataclass(frozen=True)
+class CompressConfig:
+    """Scheme + byte budget for summary compression (``HierConfig.compress``).
+
+    ``ratio`` is the per-vector uplink reduction target: an n-float vector
+    must ride in ≤ n/ratio 4-byte words, and each scheme solves for its own
+    parameter (sketch_dim = n/ratio; top-k pays value+index so k = n/2ratio;
+    rank-r pays r·(rows+cols) of the reshaped near-square matrix).  Explicit
+    ``sketch_dim`` / ``k`` / ``rank`` override the budget-derived value.
+    """
+    scheme: str = "topk"           # identity | sign_sketch | srht | topk | lowrank
+    ratio: float = 8.0
+    sketch_dim: Optional[int] = None
+    k: Optional[int] = None
+    rank: Optional[int] = None
+    u_frac: float = 0.5            # fraction of the per-summary budget spent
+                                   # on ū vs ĝ; the update stream carries the
+                                   # applied step, so overweighting it (~0.75)
+                                   # buys loss at the same wire size.  Linear
+                                   # sketches need 0.5: ū and ĝ must share S
+                                   # for the sketch-space c-term.
+    error_feedback: bool = True
+    device_uplink: bool = False    # also EF-compress device→gateway uploads
+                                   # — BOTH the update and the gradient
+                                   # stream (the tier solve consumes both),
+                                   # with per-device residual state
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.ratio < 1.0:
+            raise ValueError(f"ratio must be >= 1, got {self.ratio}")
+        for fname in ("sketch_dim", "k", "rank"):
+            v = getattr(self, fname)
+            if v is not None and v < 1:
+                raise ValueError(f"{fname} must be >= 1, got {v}")
+        if not (0.0 < self.u_frac < 1.0):
+            raise ValueError(f"u_frac must be in (0, 1), got {self.u_frac}")
+        if self.u_frac != 0.5 and self.scheme in ("identity", "sign_sketch",
+                                                  "srht"):
+            raise ValueError(f"u_frac={self.u_frac} needs a selection scheme "
+                             "(topk|lowrank): linear sketches must sketch ū "
+                             "and ĝ with the same S")
+
+    def _resolve(self, n: int, ratio: float) -> Compressor:
+        # imported here so base carries no scheme dependencies
+        from . import lowrank, sketch, topk  # noqa: F401  (register schemes)
+        if self.scheme not in _SCHEMES:
+            raise KeyError(f"unknown compression scheme '{self.scheme}'; "
+                           f"have {available_schemes()}")
+        cfg = self if ratio == self.ratio else _dc_replace(self, ratio=ratio,
+                                                           u_frac=0.5)
+        return _SCHEMES[self.scheme](cfg, n)
+
+    def build(self, n: int) -> Compressor:
+        """Resolve to a concrete compressor for a single ``n``-float vector
+        (budget: n/ratio wire words)."""
+        return self._resolve(n, self.ratio)
+
+    def build_pair(self, n: int) -> Tuple[Compressor, Compressor]:
+        """Resolve the (ū, ĝ) compressor pair for one summary: the joint
+        budget ``2n/ratio`` wire words is split ``u_frac : 1−u_frac``.
+        At u_frac = 0.5 both equal :meth:`build`.  A sub-budget larger than
+        the vector itself clamps to full width (per-vector ratio ≥ 1) — a
+        skewed split of a mild joint ratio cannot overflow n."""
+        return (self._resolve(n, max(1.0, self.ratio / (2.0 * self.u_frac))),
+                self._resolve(n, max(1.0, self.ratio
+                                     / (2.0 * (1.0 - self.u_frac)))))

@@ -1,0 +1,168 @@
+"""Linear sketch compressors: signed random projection and SRHT.
+
+Both are a matrix ``S (m, n)`` with ``E[SᵀS] = I`` — the distortion
+correction is folded into S's scaling, so sketch-space inner products are
+unbiased estimates of true inner products and the cloud's P×P stage can run
+on the payloads directly (:func:`repro.compress.base.payload_gram`).  The
+matrix never rides the wire: every party regenerates it from the shared
+per-round ``seed``, and re-drawing S each round decorrelates the
+reconstruction noise that error feedback re-injects.
+
+  * :class:`SignSketch` — dense Rademacher projection ``S = R/√m``,
+    ``R ∈ {±1}^{m×n}``.  The apply is a memory-bound tall-skinny
+    contraction streamed by ``kernels.sketch`` (dispatch via
+    ``kernels.ops.sketch_apply``); the O(m·n) sign matrix is materialized
+    from the seed per call — a production deployment would generate signs
+    on the fly inside the kernel.
+  * :class:`SRHTSketch` — structured subsampled randomized Hadamard
+    transform ``S = √(N/m)·P·H_N/√N·D``: O(n log n) apply and O(n) state
+    (the n sign flips + m sampled rows), no dense matrix at any point.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .base import Compressed, CompressConfig, Compressor, register_scheme
+
+
+def _key(seed_base: int, seed: int) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(seed_base), seed)
+
+
+class SignSketch(Compressor):
+    """Signed random projection ``v ↦ R v / √m`` (unbiased: E[SᵀS] = I).
+
+    The decode applies the MMSE shrinkage ``m/(m+n+1)·Sᵀs``: the naive
+    adjoint ``Sᵀs = SᵀS v`` inflates norms by ~n/m, which makes the
+    round-to-round error operator ``I − SᵀS`` an *expansion* for m < n+1 —
+    the applied steps diverge and error feedback cannot save them.  Shrunk,
+    ``E‖(I − c·SᵀS)x‖² = (1 − m/(m+n+1))·‖x‖²`` is a contraction, which is
+    exactly the condition the EF convergence argument needs (tested: the
+    unshrunk decode demonstrably expands, the shrunk one contracts)."""
+
+    name = "sign_sketch"
+    linear = True
+
+    def __init__(self, m: int, seed_base: int = 0):
+        if m < 1:
+            raise ValueError(f"sketch_dim must be >= 1, got {m}")
+        self.m = int(m)
+        self.seed_base = seed_base
+        self._cache = None          # (n, seed) -> S, see _matrix
+
+    def _matrix(self, n: int, seed: int) -> jax.Array:
+        # one-entry memo: EF's encode→decode pair (and every sender within a
+        # round) reuses the identical S, so regenerate only on (n, seed)
+        # change instead of 2× per vector
+        if self._cache is None or self._cache[0] != (n, seed):
+            r = jax.random.rademacher(_key(self.seed_base, seed),
+                                      (self.m, n), jnp.float32)
+            self._cache = ((n, seed), r / jnp.sqrt(jnp.float32(self.m)))
+        return self._cache[1]
+
+    def encode(self, vec: jax.Array, seed: int = 0) -> Compressed:
+        from ..kernels import ops
+        s = ops.sketch_apply(jnp.asarray(vec, jnp.float32)[None, :],
+                             self._matrix(int(vec.shape[0]), seed))[0]
+        return Compressed(self.name, int(vec.shape[0]), (s,), seed)
+
+    def decode(self, comp: Compressed) -> jax.Array:
+        shrink = self.m / (self.m + comp.n + 1.0)
+        return shrink * (self._matrix(comp.n, comp.seed).T @ comp.data[0])
+
+    def wire_floats(self, n: int) -> int:
+        return self.m
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """In-order fast Walsh–Hadamard transform of a power-of-2 vector.
+
+    Unnormalized: ``fwht(fwht(x)) = N·x`` — callers divide by √N to get the
+    orthonormal ``H_N/√N`` the SRHT analysis assumes.
+    """
+    n = x.shape[0]
+    if n & (n - 1):
+        raise ValueError(f"fwht needs a power-of-2 length, got {n}")
+    y, h = x, 1
+    while h < n:
+        y = y.reshape(-1, 2, h)
+        y = jnp.stack([y[:, 0, :] + y[:, 1, :],
+                       y[:, 0, :] - y[:, 1, :]], axis=1)
+        h *= 2
+    return y.reshape(-1)
+
+
+class SRHTSketch(Compressor):
+    """Subsampled randomized Hadamard transform (structured, matrix-free).
+
+    ``S = √(N/m) · P · (H_N/√N) · D`` with D a diagonal of Rademacher signs,
+    H the N-point Hadamard transform (N = n padded to a power of 2) and P a
+    uniform without-replacement row sample.  Unbiased (E[SᵀS] = I).
+
+    Here ``SᵀS = (N/m)·Q`` with Q an orthogonal projection onto a random
+    m-dimensional rotated-coordinate subspace, so the decode shrinks by
+    ``m/N``: the shrunk reconstruction is exactly ``Q v`` — an orthogonal
+    projection, hence ``I − Q`` is non-expansive and error feedback
+    converges (the unshrunk adjoint expands by N/m on the kept subspace).
+    At m = N the projection is the identity: decode ∘ encode is *exact* —
+    the sketch_dim = n anchor the tests pin.
+    """
+
+    name = "srht"
+    linear = True
+
+    def __init__(self, m: int, seed_base: int = 0):
+        if m < 1:
+            raise ValueError(f"sketch_dim must be >= 1, got {m}")
+        self.m = int(m)
+        self.seed_base = seed_base
+
+    def _padded(self, n: int) -> int:
+        return 1 << max(int(math.ceil(math.log2(max(n, 1)))), 0)
+
+    def _signs_rows(self, n: int, seed: int):
+        N = self._padded(n)
+        m = min(self.m, N)
+        key = _key(self.seed_base, seed)
+        d = jax.random.rademacher(key, (N,), jnp.float32)
+        rows = jax.random.choice(jax.random.fold_in(key, 1), N, (m,),
+                                 replace=False)
+        return d, rows, N, m
+
+    def encode(self, vec: jax.Array, seed: int = 0) -> Compressed:
+        n = int(vec.shape[0])
+        d, rows, N, m = self._signs_rows(n, seed)
+        v = jnp.zeros((N,), jnp.float32).at[:n].set(
+            jnp.asarray(vec, jnp.float32))
+        t = fwht(d * v) / jnp.sqrt(jnp.float32(N))
+        s = t[rows] * jnp.sqrt(jnp.float32(N) / jnp.float32(m))
+        return Compressed(self.name, n, (s,), seed)
+
+    def decode(self, comp: Compressed) -> jax.Array:
+        d, rows, N, m = self._signs_rows(comp.n, comp.seed)
+        z = jnp.zeros((N,), jnp.float32).at[rows].set(
+            comp.data[0] * jnp.sqrt(jnp.float32(N) / jnp.float32(m)))
+        shrink = m / float(N)                # Sᵀs → Q v (see class docstring)
+        return shrink * (d * fwht(z) / jnp.sqrt(jnp.float32(N)))[:comp.n]
+
+    def wire_floats(self, n: int) -> int:
+        return min(self.m, self._padded(n))
+
+
+def _build_sign(cfg: CompressConfig, n: int) -> SignSketch:
+    m = cfg.sketch_dim if cfg.sketch_dim is not None else max(
+        1, int(n / cfg.ratio))
+    return SignSketch(m, seed_base=cfg.seed)
+
+
+def _build_srht(cfg: CompressConfig, n: int) -> SRHTSketch:
+    m = cfg.sketch_dim if cfg.sketch_dim is not None else max(
+        1, int(n / cfg.ratio))
+    return SRHTSketch(m, seed_base=cfg.seed)
+
+
+register_scheme("sign_sketch", _build_sign)
+register_scheme("srht", _build_srht)

@@ -46,6 +46,11 @@ class AggregatorConfig:
     # per-update staleness discounts s_k ∈ (0, 1], set by the async runtime
     # (repro.edge): damps Gram cross-terms / effective weights of old updates
     staleness: Optional[jax.Array] = None
+    # precomputed (G, c) for the contextual solve, set by the compressed
+    # hierarchical runtime (repro.compress): the cloud's Gram stage runs on
+    # sketched cross-terms without re-touching the parameter axis, while the
+    # combine still applies the stacked (decoded) updates
+    gram_override: Optional[Tuple[jax.Array, jax.Array]] = None
 
 
 def _stacked_to_matrix(stacked: Pytree, scope: Optional[str]) -> jax.Array:
@@ -93,9 +98,12 @@ def aggregate_contextual(params: Pytree, stacked_updates: Pytree,
                          grad_tree: Pytree, cfg: AggregatorConfig
                          ) -> Tuple[Pytree, Dict[str, jax.Array]]:
     """Paper Algorithm 2 via the K×K normal equations (DESIGN.md §2)."""
-    U = _stacked_to_matrix(stacked_updates, cfg.gram_scope)
-    g = scope_vector(grad_tree, cfg.gram_scope)
-    G, c = gram_and_cross(U, g)
+    if cfg.gram_override is not None:
+        G, c = cfg.gram_override
+    else:
+        U = _stacked_to_matrix(stacked_updates, cfg.gram_scope)
+        g = scope_vector(grad_tree, cfg.gram_scope)
+        G, c = gram_and_cross(U, g)
     alpha = solve_alpha(G, c, cfg.solve)
     new = tree_add(params, stacked_weighted_sum(stacked_updates, alpha))
     beta = cfg.solve.beta

@@ -18,13 +18,17 @@ each aggregation node waits for its members (timeout model: dropouts still
 cost their partial time), summarizes, and ships the summary one hop up —
 every hop is an event on the PR-1 scheduler, so round times are true
 multi-hop critical paths and the per-tier byte ledger measures the uplink
-saving the hierarchy exists for.
+saving the hierarchy exists for.  With ``HierConfig.compress`` set (the
+``hier_contextual_sketch`` aggregator), every summary uplink instead
+carries an error-feedback-compressed payload (``repro.compress``): the
+ledger records true serialized sizes, downstream solves consistently use
+the decodes, and the cloud's γ stage runs on sketched cross-terms.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dc_replace
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional
 
@@ -286,15 +290,21 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     the flat sync path) — then its summary rides the uplink as a scheduled
     multi-hop event.  The round ends when the cloud's last child reports; the
     cloud stage goes through the ``core.aggregation`` registry
-    (``hier_contextual`` / ``hier_fedavg`` / ``hier_relay``).
+    (``hier_contextual`` / ``hier_fedavg`` / ``hier_relay`` /
+    ``hier_contextual_sketch``).  With ``cfg.compress`` set, summary uplinks
+    carry EF-compressed payloads and the γ stage solves on sketched
+    cross-terms (see the module docstring and ``repro.compress``).
     """
     # Imported lazily: repro.hier imports repro.edge which imports repro.fl,
     # so the reverse edge must not exist at import time.
+    from ..compress import ErrorFeedback, payload_gram
+    from ..core.flatten import tree_to_vector, vector_to_tree
     from ..edge.events import EventKind, EventScheduler
     from ..edge.wallclock import model_flops_per_step, model_payload_bytes
-    from ..hier.comm import CommLedger, summary_bytes, update_bytes
-    from ..hier.gateway import (weighted_mean_trees, merge_summaries,
-                                summarize_updates)
+    from ..hier.comm import (CommLedger, compressed_summary_bytes,
+                             summary_bytes, update_bytes)
+    from ..hier.gateway import (CompressedSummary, weighted_mean_trees,
+                                merge_summaries, summarize_updates)
     from ..hier.hier_server import blockdiag_diagnostics, cloud_aggregate
 
     fleet = topology.fleet
@@ -332,6 +342,17 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     solve_cfg = cfg.solve_config()
     relay = cfg.aggregator == "hier_relay"
     tier_mode = cfg.tier_mode
+
+    # Summary compression (repro.compress): every compressing sender keeps
+    # per-sender error-feedback residuals that persist ACROSS rounds, and
+    # linear sketches share one per-round seed so the cloud's Gram stage can
+    # run in sketch space (payload_gram).  In a star topology summaries
+    # never exist, so only the optional device-uplink compression applies.
+    compressing = cfg.compressing
+    if compressing:
+        comp_u_c, comp_g_c = cfg.compress.build_pair(n_model)
+        ef = ErrorFeedback(enabled=cfg.compress.error_feedback)
+        compress_devices = cfg.compress.device_uplink
 
     # model-broadcast delay & per-link down-bytes from the cloud to each
     # gateway (device-tier downlink is inside DeviceProfile.task_time)
@@ -381,6 +402,19 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                                      jnp.asarray(num_steps), keys)
         take = lambda stacked, i: jax.tree_util.tree_map(
             lambda l: l[i], stacked)
+        # participant index -> decoded device (update, gradient) — device-
+        # uplink compression only; everything downstream uses what arrived,
+        # so the ledger prices exactly what the solves consume
+        dev_decoded: Dict[int, Pytree] = {}
+        dev_decoded_g: Dict[int, Pytree] = {}
+
+        def take_delta(i):
+            d = dev_decoded.get(i)
+            return take(deltas, i) if d is None else d
+
+        def take_grad(i):
+            d = dev_decoded_g.get(i)
+            return take(grads, i) if d is None else d
 
         # -- event loop: device terminals, then multi-hop transfers ---------
         # Contextual tiers run a gradient pre-pass: each gateway ships its
@@ -457,16 +491,40 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                         update_bytes(n_model))
             else:   # no pre-pass: solve (or average) against the cohort's
                     # own ĝ_g, which rides up inside the summary
-                send_up("summary", node, _gateway_summary(gid, idxs, None),
-                        summary_bytes(len(idxs), n_model, include_grad=True))
+                s = _gateway_summary(gid, idxs, None)
+                if compressing:
+                    send_up("summary", node, *_compress_summary(s, gid))
+                else:
+                    send_up("summary", node, s,
+                            summary_bytes(len(idxs), n_model,
+                                          include_grad=True))
 
         def _gateway_summary(gid, idxs, solve_grad):
+            # §III-C at the gateway tier: a fan-in-sampled cohort prices the
+            # pool it was drawn from, exactly like contextual_expected flat
+            pool = len(topology.nodes[gid].children)
+            pool_size = (pool if cfg.fan_in is not None and cfg.fan_in < pool
+                         else None)
             return summarize_updates(
                 gid, [participants[i][0] for i in idxs],
-                [take(deltas, i) for i in idxs],
-                [take(grads, i) for i in idxs],
+                [take_delta(i) for i in idxs],
+                [take_grad(i) for i in idxs],
                 [1] * len(idxs), solve_cfg, tier_mode, cfg.gram_scope,
-                solve_grad=solve_grad)
+                solve_grad=solve_grad, pool_size=pool_size)
+
+        def _compress_summary(s, nid):
+            """EF-compress one summary's (ū, ĝ) for its uplink hop; returns
+            (payload, wire bytes).  The same per-round sketch seed is shared
+            by every node and both vectors, so sketched cross-terms compose
+            at the cloud; residual state is per (vector, node)."""
+            comp_u, u_hat = ef.step(("u", nid), tree_to_vector(s.u_bar),
+                                    comp_u_c, seed=t)
+            comp_g, g_hat = ef.step(("g", nid), tree_to_vector(s.grad_est),
+                                    comp_g_c, seed=t)
+            decoded = dc_replace(s, u_bar=vector_to_tree(u_hat, params),
+                                 grad_est=vector_to_tree(g_hat, params))
+            nbytes = compressed_summary_bytes(comp_u.nbytes + comp_g.nbytes)
+            return CompressedSummary(decoded, comp_u, comp_g), nbytes
 
         def on_grad_complete(nid):
             nonlocal ghat_global
@@ -513,6 +571,13 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                 fwd = sum(kids, [])
                 send_up("summary", node, fwd,
                         len(fwd) * update_bytes(n_model))
+            elif compressing:
+                # merge over what actually arrived (the decodes), then
+                # re-compress with this node's own error-feedback state
+                s = merge_summaries(nid, [p.summary for p in kids],
+                                    solve_cfg, tier_mode, cfg.gram_scope,
+                                    solve_grad=node_ghat.get(nid))
+                send_up("summary", node, *_compress_summary(s, nid))
             else:
                 s = merge_summaries(nid, kids, solve_cfg, tier_mode,
                                     cfg.gram_scope,
@@ -532,12 +597,47 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         def _cloud_stage(payload):
             if isinstance(payload, list) and isinstance(
                     payload[0], (int, np.integer)):
-                idxs = jnp.asarray(np.asarray(payload))  # raw (star / relay)
-                stacked = jax.tree_util.tree_map(lambda l: l[idxs], deltas)
-                grad_est = jax.tree_util.tree_map(
-                    lambda l: jnp.mean(l[idxs], axis=0), grads)
+                # raw updates (star / relay); a star cloud is the fleet's one
+                # gateway, so fan-in sampling prices its pool here too
+                pool = len(topology.nodes[topology.cloud_id].children)
+                scale = ((pool - 1) / max(len(payload) - 1, 1)
+                         if cfg.fan_in is not None and cfg.fan_in < pool
+                         and not relay and tier_mode == "contextual" else 1.0)
+                if dev_decoded:                  # device-uplink compression
+                    stacked = jax.tree_util.tree_map(
+                        lambda *ls: jnp.stack(ls),
+                        *[take_delta(int(i)) for i in payload])
+                    grad_est = weighted_mean_trees(
+                        [take_grad(int(i)) for i in payload],
+                        np.ones(len(payload)))
+                else:
+                    idxs = jnp.asarray(np.asarray(payload))
+                    stacked = jax.tree_util.tree_map(lambda l: l[idxs],
+                                                     deltas)
+                    grad_est = jax.tree_util.tree_map(
+                        lambda l: jnp.mean(l[idxs], axis=0), grads)
                 return cloud_aggregate(params, stacked, grad_est,
-                                       [1] * len(payload), cfg, combos=False)
+                                       [1] * len(payload), cfg, combos=False,
+                                       solve_scale=scale)
+            if compressing:                      # compressed child summaries
+                csums = payload
+                summaries = [p.summary for p in csums]
+                counts = [s.num_updates for s in summaries]
+                # the P×P stage runs on the sketched cross-terms, corrected
+                # for sketch distortion inside payload_gram; the combine
+                # applies the decodes, so solve and step stay consistent
+                G2c2 = payload_gram(comp_u_c,
+                                    [p.comp_u for p in csums],
+                                    [p.comp_g for p in csums],
+                                    np.asarray(counts, np.float64))
+                stacked = jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls), *[s.u_bar for s in summaries])
+                grad_est = weighted_mean_trees(
+                    [s.grad_est for s in summaries], np.asarray(counts))
+                # no blockdiag diagnostics: the K_g² Gram blocks stayed at
+                # the gateways — that is where the byte saving comes from
+                return cloud_aggregate(params, stacked, grad_est, counts,
+                                       cfg, gram_override=G2c2)
             summaries = payload              # top-tier child summaries
             stacked = jax.tree_util.tree_map(
                 lambda *ls: jnp.stack(ls), *[s.u_bar for s in summaries])
@@ -580,8 +680,28 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                 if evt.kind == EventKind.ARRIVAL:
                     survivors[gid].append(idx_of[evt.device_id])
                     result.arrived += 1
-                    ledger.record_up(topology.nodes[gid].tier,
-                                     update_bytes(n_model))
+                    if compressing and compress_devices:
+                        # per-device error feedback: the residual of every
+                        # round a device DID report persists on-device.
+                        # BOTH streams compress — the solves downstream
+                        # consume the gradient too, so an upload that only
+                        # shipped the update would be under-priced.
+                        i = idx_of[evt.device_id]
+                        comp_d, vhat = ef.step(
+                            ("dev", evt.device_id),
+                            tree_to_vector(take(deltas, i)), comp_u_c,
+                            seed=t)
+                        comp_dg, ghat = ef.step(
+                            ("devg", evt.device_id),
+                            tree_to_vector(take(grads, i)), comp_g_c,
+                            seed=t)
+                        dev_decoded[i] = vector_to_tree(vhat, params)
+                        dev_decoded_g[i] = vector_to_tree(ghat, params)
+                        ledger.record_up(topology.nodes[gid].tier,
+                                         comp_d.nbytes + comp_dg.nbytes)
+                    else:
+                        ledger.record_up(topology.nodes[gid].tier,
+                                         update_bytes(n_model))
                 else:
                     result.dropped += 1
                 out_dev[gid] -= 1

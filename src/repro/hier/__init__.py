@@ -12,27 +12,31 @@ Submodules:
                   ``hier_fedavg`` and summary-free ``hier_relay`` baselines
                   registered in ``core.aggregation``
   * comm        — per-tier byte/latency ledger (the ≥5× cloud-uplink saving
-                  the subsystem exists to deliver)
+                  the subsystem exists to deliver, and the true serialized
+                  sizes of ``repro.compress`` summary payloads)
 
 The entry point is :func:`repro.fl.run_hier_simulation`, which drives these
 through the PR-1 event scheduler with multi-hop link events against the same
 datasets/metrics as the flat sync and async paths.
 """
-from .comm import (CommLedger, TierTraffic, model_size, summary_bytes,
-                   update_bytes)
-from .gateway import (GatewaySummary, merge_summaries, summarize_updates,
-                      tier_contextual, tier_mean)
+from .comm import (CommLedger, TierTraffic, compressed_summary_bytes,
+                   model_size, summary_bytes, update_bytes)
+from .gateway import (CompressedSummary, GatewaySummary, merge_summaries,
+                      summarize_updates, tier_contextual, tier_mean)
 from .hier_server import (HierConfig, aggregate_hier_contextual,
+                          aggregate_hier_contextual_sketch,
                           aggregate_hier_fedavg, blockdiag_diagnostics,
                           cloud_aggregate)
 from .topology import (Link, TopoNode, Topology, geo_partitioned_topology,
                        get_topology, star_topology, two_tier_topology)
 
 __all__ = [
-    "CommLedger", "TierTraffic", "model_size", "summary_bytes", "update_bytes",
-    "GatewaySummary", "merge_summaries", "summarize_updates",
-    "tier_contextual", "tier_mean",
-    "HierConfig", "aggregate_hier_contextual", "aggregate_hier_fedavg",
+    "CommLedger", "TierTraffic", "compressed_summary_bytes", "model_size",
+    "summary_bytes", "update_bytes",
+    "CompressedSummary", "GatewaySummary", "merge_summaries",
+    "summarize_updates", "tier_contextual", "tier_mean",
+    "HierConfig", "aggregate_hier_contextual",
+    "aggregate_hier_contextual_sketch", "aggregate_hier_fedavg",
     "blockdiag_diagnostics", "cloud_aggregate",
     "Link", "TopoNode", "Topology", "geo_partitioned_topology",
     "get_topology", "star_topology", "two_tier_topology",

@@ -38,6 +38,18 @@ def summary_bytes(k: int, n: int, include_grad: bool = False) -> float:
     return FLOAT_BYTES * ((2 if include_grad else 1) * n + k * k + 2 * k + 2)
 
 
+def compressed_summary_bytes(payload_bytes: float) -> float:
+    """One *compressed* gateway summary (``repro.compress``): the ū_g / ĝ_g
+    payloads ride at their serialized sketch/top-k/low-rank size instead of
+    2n floats, plus the device count and node id.  The K_g² Gram block, the
+    cross term and the tier weights α_g all stay at the gateway — the parent
+    solve needs only (ū, ĝ, counts); everything else ever only backed
+    cloud-side diagnostics.  ``payload_bytes`` is the summed
+    ``Compressed.nbytes`` of the two payloads — the ledger records true
+    serialized sizes, not a formula (tested)."""
+    return payload_bytes + FLOAT_BYTES * 2
+
+
 def model_size(params) -> int:
     return tree_size(params)
 

@@ -22,7 +22,7 @@ stationary point) — tested in ``tests/test_hier.py``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -48,6 +48,19 @@ class GatewaySummary:
     u_bar: Pytree                  # Σ_k α_k Δ_k, same structure as params
     grad_est: Pytree               # this subtree's ∇f estimate
     info: Dict[str, jax.Array]
+
+
+@dataclass
+class CompressedSummary:
+    """A :class:`GatewaySummary` as it rides a compressed uplink
+    (``repro.compress``): ``summary`` holds the *decoded* ū_g / ĝ_g — what
+    the receiver reconstructs and every downstream solve consistently uses —
+    while ``comp_u`` / ``comp_g`` are the payloads that actually crossed the
+    wire (serialized size → ``comm.compressed_summary_bytes``; sketch-space
+    cross-terms → ``compress.payload_gram``)."""
+    summary: GatewaySummary
+    comp_u: Any                    # repro.compress.Compressed
+    comp_g: Any                    # repro.compress.Compressed
 
 
 def _stack_trees(trees: Sequence[Pytree]) -> Pytree:
@@ -101,7 +114,8 @@ def summarize_updates(node_id: int, member_ids: Sequence[int],
                       counts: Sequence[int], solve_cfg: SolveConfig,
                       mode: str = "contextual",
                       gram_scope: Optional[str] = None,
-                      solve_grad: Optional[Pytree] = None) -> GatewaySummary:
+                      solve_grad: Optional[Pytree] = None,
+                      pool_size: Optional[int] = None) -> GatewaySummary:
     """Aggregate one node's member updates into its upstream summary.
 
     ``updates[i]`` is member i's update (a raw device Δ at tier 1, a child's
@@ -115,12 +129,26 @@ def summarize_updates(node_id: int, member_ids: Sequence[int],
     skewed sample of the fleet, and optimizing the bound against a skewed
     ∇f estimate misweights the whole cohort in a way the parent's γ rescale
     cannot repair (it scales the cohort jointly).
+
+    ``pool_size`` applies the §III-C expected-bound correction when the
+    cohort is a random sample of a larger pool (fan-in sampling): the
+    contextual solve is scaled by (N−1)/(K−1) so a sampled cohort prices the
+    pool it stands in for, exactly as ``contextual_expected`` does for the
+    flat server.  No-op for the "mean" tier rule (FedAvg's weights are
+    already selection-unbiased).
     """
     if not updates:
         raise ValueError(f"node {node_id}: cannot summarize zero updates")
     counts = np.asarray(counts, np.int64)
     stacked = _stack_trees(updates)
     grad_est = weighted_mean_trees(grads, counts)
+    if pool_size is not None and pool_size < len(updates):
+        raise ValueError(f"node {node_id}: pool_size {pool_size} smaller "
+                         f"than the cohort ({len(updates)})")
+    if mode == "contextual" and pool_size is not None:
+        scale = (pool_size - 1) / max(len(updates) - 1, 1)
+        solve_cfg = replace(
+            solve_cfg, expectation_scale=solve_cfg.expectation_scale * scale)
     if mode == "contextual":
         u_bar, alpha, G, c, info = tier_contextual(
             stacked, grad_est if solve_grad is None else solve_grad,
@@ -153,9 +181,8 @@ def merge_summaries(node_id: int, children: Sequence[GatewaySummary],
     tier only *reallocates* weight across children — every corner γ = e_g is
     feasible, so the merged bound is never worse than promoting any single
     child's combination unchanged."""
-    from dataclasses import replace as _replace
     return summarize_updates(
         node_id, [s.node_id for s in children],
         [s.u_bar for s in children], [s.grad_est for s in children],
         [s.num_updates for s in children],
-        _replace(solve_cfg, sum_to=1.0), mode, gram_scope, solve_grad)
+        replace(solve_cfg, sum_to=1.0), mode, gram_scope, solve_grad)

@@ -14,7 +14,7 @@ arrive inside the summaries and back the block-diagonal bound diagnostics
 the γ stage's Theorem-1 reduction ``(β/2) γᵀG₂γ`` is *exact* for the final
 combined update.
 
-Three strategies are registered in ``core.aggregation`` (same calling
+Four strategies are registered in ``core.aggregation`` (same calling
 convention as every other aggregator; the stacked leading axis is the
 top-tier children instead of devices):
 
@@ -25,6 +25,10 @@ top-tier children instead of devices):
   * ``hier_relay``      — summary-free baseline: gateways forward raw
     updates, the cloud runs the flat contextual solve.  Same loss as flat,
     full O(K·n) cloud uplink — the byte-accounting comparator.
+  * ``hier_contextual_sketch`` — compressed-summary variant
+    (``repro.compress``): summaries ride the uplink as EF-compressed
+    sketch/top-k/low-rank payloads and the γ stage solves on sketched
+    cross-terms supplied via ``AggregatorConfig.gram_override``.
 """
 from __future__ import annotations
 
@@ -34,6 +38,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compress import CompressConfig
 from ..core.aggregation import (AggregatorConfig, aggregate,
                                 aggregate_contextual, aggregate_fedavg,
                                 register_aggregator)
@@ -68,9 +73,21 @@ def aggregate_hier_fedavg(params: Pytree, stacked_updates: Pytree,
     return aggregate_fedavg(params, stacked_updates, grad_tree, cfg)
 
 
+def aggregate_hier_contextual_sketch(params: Pytree, stacked_updates: Pytree,
+                                     grad_tree: Pytree, cfg: AggregatorConfig
+                                     ) -> Tuple[Pytree, Dict[str, jax.Array]]:
+    """γ-solve over *compressed* child combinations: the runtime supplies the
+    sketched cross-terms through ``cfg.gram_override`` (see
+    ``repro.compress.payload_gram``) and the decoded updates as the stacked
+    members, so the solve prices exactly what crossed the wire while never
+    re-touching the parameter axis for the Gram stage."""
+    return aggregate_hier_contextual(params, stacked_updates, grad_tree, cfg)
+
+
 register_aggregator("hier_contextual", aggregate_hier_contextual)
 register_aggregator("hier_fedavg", aggregate_hier_fedavg)
 register_aggregator("hier_relay", aggregate_contextual)
+register_aggregator("hier_contextual_sketch", aggregate_hier_contextual_sketch)
 
 
 # ---------------------------------------------------------------------------
@@ -79,7 +96,9 @@ register_aggregator("hier_relay", aggregate_contextual)
 
 def cloud_aggregate(params: Pytree, stacked_members: Pytree,
                     grad_est: Pytree, member_counts: Sequence[int],
-                    cfg: "HierConfig", combos: bool = True
+                    cfg: "HierConfig", combos: bool = True,
+                    gram_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    solve_scale: float = 1.0
                     ) -> Tuple[Pytree, Dict[str, Any]]:
     """Final tier, routed through the ``core.aggregation`` registry.
 
@@ -94,12 +113,19 @@ def cloud_aggregate(params: Pytree, stacked_members: Pytree,
     solve = cfg.solve_config()
     if combos:
         solve = replace(solve, sum_to=1.0)
+    if solve_scale != 1.0:
+        # §III-C pool pricing for a fan-in-sampled raw cohort (star clouds
+        # are the fleet's single gateway); parent-tier combo solves conserve
+        # mass instead, and sum_to overrides expectation_scale by design
+        solve = replace(solve,
+                        expectation_scale=solve.expectation_scale * solve_scale)
     weights = None
     if cfg.aggregator == "hier_fedavg":
         weights = jnp.asarray(list(member_counts), jnp.float32)
     agg_cfg = AggregatorConfig(name=cfg.aggregator, solve=solve,
                                gram_scope=cfg.gram_scope,
-                               client_weights=weights)
+                               client_weights=weights,
+                               gram_override=gram_override)
     new_params, info = aggregate(cfg.aggregator)(params, stacked_members,
                                                  grad_est, agg_cfg)
     info = dict(info)
@@ -138,9 +164,16 @@ def blockdiag_diagnostics(summaries: Sequence[GatewaySummary],
 class HierConfig:
     """Configuration of a hierarchical run (mirrors ``ServerConfig`` /
     ``AsyncConfig`` where concepts coincide)."""
-    aggregator: str = "hier_contextual"  # hier_contextual | hier_fedavg | hier_relay
+    aggregator: str = "hier_contextual"  # hier_contextual | hier_fedavg |
+                                         # hier_relay | hier_contextual_sketch
     fan_in: Optional[int] = None         # devices sampled per gateway per
-                                         # round (None → every child)
+                                         # round (None → every child; when
+                                         # sampling, the gateway solve prices
+                                         # its pool via §III-C)
+    compress: Optional[CompressConfig] = None
+                                         # summary compression (repro.compress);
+                                         # requires the _sketch aggregator —
+                                         # defaulted when that name is chosen
     gateway_grad: str = "local"          # gradient the gateway solves price
                                          # the c-term against: "local" (each
                                          # subtree's own ĝ — composes best
@@ -159,15 +192,28 @@ class HierConfig:
 
     def __post_init__(self):
         if self.aggregator not in ("hier_contextual", "hier_fedavg",
-                                   "hier_relay"):
+                                   "hier_relay", "hier_contextual_sketch"):
             raise ValueError(f"unknown hier aggregator '{self.aggregator}' "
-                             "(hier_contextual|hier_fedavg|hier_relay)")
+                             "(hier_contextual|hier_fedavg|hier_relay|"
+                             "hier_contextual_sketch)")
         if self.fan_in is not None and self.fan_in < 1:
             raise ValueError(f"fan_in must be >= 1 (or None for all "
                              f"children), got {self.fan_in}")
         if self.gateway_grad not in ("global", "local"):
             raise ValueError(f"gateway_grad must be 'global' or 'local', "
                              f"got '{self.gateway_grad}'")
+        if self.aggregator == "hier_contextual_sketch" and self.compress is None:
+            object.__setattr__(self, "compress", CompressConfig())
+        if self.compress is not None:
+            if self.aggregator != "hier_contextual_sketch":
+                raise ValueError("summary compression requires the "
+                                 "'hier_contextual_sketch' aggregator, got "
+                                 f"'{self.aggregator}'")
+            if self.gateway_grad != "local":
+                raise ValueError("summary compression composes with "
+                                 "gateway_grad='local' only: the gradient "
+                                 "pre-pass would ship full-width ĝ both ways "
+                                 "and defeat the uplink budget")
 
     @property
     def smoothness(self) -> float:
@@ -178,6 +224,10 @@ class HierConfig:
         """Per-tier rule below the cloud: contextual solves everywhere except
         the hier-FedAvg baseline's count-weighted means."""
         return "mean" if self.aggregator == "hier_fedavg" else "contextual"
+
+    @property
+    def compressing(self) -> bool:
+        return self.compress is not None
 
     def solve_config(self) -> SolveConfig:
         return SolveConfig(beta=self.smoothness, ridge=self.ridge)

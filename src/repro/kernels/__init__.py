@@ -2,12 +2,16 @@
 
   * ``gram``        — fused U Uᵀ / U g streaming contraction (server agg.)
   * ``combine``     — α-weighted update combine (paper eq. 4)
+  * ``sketch``      — fused stacked sketch-apply U Rᵀ (summary compression)
+  * ``topk``        — chunked top-k magnitude selection (summary compression)
   * ``decode_attn`` — flash-decode attention with LSE partials for
                       seq-sharded KV caches
 
 Validated on CPU with ``interpret=True`` against ``ref.py`` oracles;
 ``ops.py`` wrappers dispatch compiled kernels on TPU.
 """
-from .ops import flash_decode, gram_and_cross, lse_merge, weighted_combine
+from .ops import (flash_decode, gram_and_cross, lse_merge, sketch_apply,
+                  topk_select, weighted_combine)
 
-__all__ = ["flash_decode", "gram_and_cross", "lse_merge", "weighted_combine"]
+__all__ = ["flash_decode", "gram_and_cross", "lse_merge", "sketch_apply",
+           "topk_select", "weighted_combine"]

@@ -15,6 +15,8 @@ from . import ref
 from .combine import combine_pallas
 from .decode_attn import flash_decode_pallas
 from .gram import gram_block_pallas, gram_pallas
+from .sketch import sketch_apply_pallas
+from .topk import topk_select_pallas
 
 
 def on_tpu() -> bool:
@@ -44,6 +46,35 @@ def gram_block_and_cross(ua: jax.Array, ub: jax.Array, grad: jax.Array, *,
         return gram_block_pallas(ua, ub, grad, block_n=block_n,
                                  interpret=not on_tpu())
     return ref.gram_block_ref(ua, ub, grad)
+
+
+def sketch_apply(updates: jax.Array, sketch: jax.Array, *,
+                 use_pallas: Optional[bool] = None,
+                 block_n: int = 2048) -> jax.Array:
+    """Stacked sketch-apply ``U Rᵀ``.  updates (K, n), sketch (m, n).
+
+    Unlike the older wrappers above, ``use_pallas=None`` runs the jnp
+    reference off-TPU (this sits on the per-round compression hot path, so
+    interpret-mode validation is opt-in via ``use_pallas=True``)."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return sketch_apply_pallas(updates, sketch, block_n=block_n,
+                                   interpret=not on_tpu())
+    return ref.sketch_ref(updates, sketch)
+
+
+def topk_select(vec: jax.Array, k: int, *,
+                use_pallas: Optional[bool] = None,
+                block_n: int = 2048) -> Tuple[jax.Array, jax.Array]:
+    """k largest-|v| entries as (values, indices i32); same dispatch default
+    as :func:`sketch_apply` (reference off-TPU, compiled kernel on TPU).
+    Falls back to the reference when k exceeds the per-chunk candidate
+    budget ``block_n``."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    if use_pallas and k <= block_n:
+        return topk_select_pallas(vec, k, block_n=block_n,
+                                  interpret=not on_tpu())
+    return ref.topk_ref(vec, k)
 
 
 def weighted_combine(params_vec: jax.Array, updates: jax.Array,

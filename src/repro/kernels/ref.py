@@ -21,6 +21,19 @@ def gram_block_ref(ua: jax.Array, ub: jax.Array, grad: jax.Array):
     return a @ b.T, a @ grad.astype(jnp.float32)
 
 
+def sketch_ref(updates: jax.Array, sketch: jax.Array) -> jax.Array:
+    """U Rᵀ in f32 — oracle for kernels.sketch (stacked sketch-apply)."""
+    return updates.astype(jnp.float32) @ sketch.astype(jnp.float32).T
+
+
+def topk_ref(vec: jax.Array, k: int):
+    """(values, indices i32) of the k largest-|v| entries — oracle for
+    kernels.topk."""
+    v = vec.astype(jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(v), k)
+    return jnp.take(v, idx), idx.astype(jnp.int32)
+
+
 def combine_ref(params_vec: jax.Array, updates: jax.Array,
                 alpha: jax.Array) -> jax.Array:
     """w + Σ α_k U_k — oracle for kernels.combine."""

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused sketch-apply for summary compression.
+
+Computes ``S_U = U Rᵀ`` for a stacked batch ``U (K, n)`` against a sketch
+matrix ``R (m, n)`` in ONE streaming pass over the parameter axis —
+the same memory-bound tall-skinny shape as the Gram kernel (n is 10⁶–10¹⁰,
+K and m small), so the win is identical: each (K, block_n) tile of U and
+(m, block_n) tile of R ride a single HBM→VMEM stream and the (K, m) result
+stays resident in VMEM across the whole grid.  The *fusion* is the batch
+axis: a gateway stacks ū_g and ĝ_g (and any number of member vectors) as
+rows of U and sketches them all in the one pass, instead of one pass per
+vector.
+
+Off-TPU the jnp reference path (``ref.sketch_ref``) is the default via
+``ops.sketch_apply``; ``interpret=True`` here validates the kernel
+end-to-end in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sketch_kernel(u_ref, r_ref, su_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        su_ref[...] = jnp.zeros_like(su_ref)
+
+    u = u_ref[...].astype(jnp.float32)            # (K, bn)
+    r = r_ref[...].astype(jnp.float32)            # (m, bn)
+    # MXU contraction over the streamed parameter axis: (K, bn)·(m, bn)ᵀ
+    su_ref[...] += jax.lax.dot_general(
+        u, r, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def sketch_apply_pallas(updates: jax.Array, sketch: jax.Array, *,
+                        block_n: int = 2048, interpret: bool = True):
+    """``updates (K, n)``, ``sketch (m, n)`` → ``S_U (K, m) f32``.
+
+    K and m are padded to the 8-sublane boundary independently (cohorts and
+    sketch dims are rarely MXU-aligned); n pads to ``block_n`` with zero
+    columns (exact — they contribute nothing to the contraction)."""
+    K, n = updates.shape
+    m, ns = sketch.shape
+    if n != ns:
+        raise ValueError(f"sketch operands disagree on n: {n} vs {ns}")
+    padK, padM, padN = (-K) % 8, (-m) % 8, (-n) % block_n
+    u = jnp.pad(updates, ((0, padK), (0, padN)))
+    r = jnp.pad(sketch, ((0, padM), (0, padN)))
+    Kp, Mp = K + padK, m + padM
+
+    grid = ((n + padN) // block_n,)
+    su = pl.pallas_call(
+        _sketch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Kp, block_n), lambda i: (0, i)),
+            pl.BlockSpec((Mp, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((Kp, Mp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Kp, Mp), jnp.float32),
+        interpret=interpret,
+    )(u, r)
+    return su[:K, :m]

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: chunked top-k magnitude selection.
+
+Global top-k over an n-vector decomposes exactly: every global top-k entry
+is a top-k entry of its own chunk, so the kernel streams (1, block_n) tiles
+and emits each chunk's k largest-|v| candidates (value + global index);
+a final O(k·n/block_n) merge on the host side selects the true top k.
+This keeps the n-axis traffic to one streaming read — the same HBM-bound
+shape as the Gram/sketch kernels — while the candidate set stays tiny.
+
+Padding note: n pads to ``block_n`` with zeros, so a padded slot can tie a
+genuine zero entry inside its chunk; the merge masks candidates with index
+≥ n to magnitude −1 before the final select, so no pad ever wins over any
+real coordinate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(v_ref, vals_ref, idx_ref, *, kp: int, block_n: int):
+    v = v_ref[...].astype(jnp.float32)[0]                    # (bn,)
+    mags, local = jax.lax.top_k(jnp.abs(v), kp)
+    del mags
+    vals_ref[...] = jnp.take(v, local)[None, :]
+    idx_ref[...] = (local + pl.program_id(0) * block_n
+                    ).astype(jnp.int32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def topk_select_pallas(vec: jax.Array, k: int, *, block_n: int = 2048,
+                       interpret: bool = True):
+    """``vec (n,)`` → ``(values (k,) f32, indices (k,) i32)`` of the k
+    largest-magnitude entries.  Requires ``k <= block_n`` (the per-chunk
+    candidate count); ``ops.topk_select`` falls back to the reference path
+    otherwise."""
+    n = vec.shape[0]
+    if k > block_n:
+        raise ValueError(f"k={k} exceeds block_n={block_n}; use the "
+                         "reference path or raise block_n")
+    padN = (-n) % block_n
+    v = jnp.pad(vec.astype(jnp.float32), (0, padN)).reshape(1, n + padN)
+    chunks = (n + padN) // block_n
+    kp = min(k + ((-k) % 8), block_n)        # sublane-pad the candidate axis
+
+    vals, idx = pl.pallas_call(
+        functools.partial(_topk_kernel, kp=kp, block_n=block_n),
+        grid=(chunks,),
+        in_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((1, kp), lambda i: (i, 0)),
+            pl.BlockSpec((1, kp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((chunks, kp), jnp.float32),
+            jax.ShapeDtypeStruct((chunks, kp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(v)
+
+    cand_vals = vals.reshape(-1)
+    cand_idx = idx.reshape(-1)
+    mags = jnp.where(cand_idx < n, jnp.abs(cand_vals), -1.0)
+    _, pick = jax.lax.top_k(mags, k)
+    return jnp.take(cand_vals, pick), jnp.take(cand_idx, pick)
