@@ -30,25 +30,22 @@ import math
 import os
 import sys
 
-# metric classification by field-name substring (first match wins)
-IGNORE = ("round_time_s", "wall_time", "us_per_call", "time_end")
+# metric classification by field-name substring (first match wins).
+# IGNORE covers machine-dependent fields: real wall-clock, autotune timings
+# and the autotune's backend selection (a faster machine may legitimately
+# pick a different backend; the oracle_max_abs_err field is what gates
+# kernel correctness).
+IGNORE = ("round_time_s", "wall_time", "us_per_call", "time_end",
+          "selected", "candidates_timed")
 EXACT = ("bytes", "savings", "gateways", "devices", "rounds", "num_",
          "meets_")
 LOOSE_REL = 0.35        # losses / accs / virtual times across jax versions
 LOOSE_ABS = 0.05
 EXACT_REL = 1e-6
 
-
-def _identity(record: dict) -> tuple:
-    parts = []
-    for key in sorted(record):
-        val = record[key]
-        if isinstance(val, str):
-            parts.append((key, val))
-        elif key in ("ratio", "u_frac", "depth", "gateways",
-                     "fleet_slowdown", "target_acc"):
-            parts.append((key, val))
-    return tuple(parts)
+# numeric fields that are part of a record's identity, not metrics
+IDENTITY_NUM = ("ratio", "u_frac", "depth", "gateways", "fleet_slowdown",
+                "target_acc", "K", "n", "m", "k")
 
 
 def _classify(key: str):
@@ -61,17 +58,27 @@ def _classify(key: str):
     return LOOSE_REL, LOOSE_ABS
 
 
+def _identity(record: dict) -> tuple:
+    parts = []
+    for key in sorted(record):
+        val = record[key]
+        if _classify(key) is None:
+            continue                 # ignored fields never key identity
+        if isinstance(val, str) or key in IDENTITY_NUM:
+            parts.append((key, val))
+    return tuple(parts)
+
+
 def _check_value(path: str, key: str, old, new, problems: list) -> None:
+    if _classify(key) is None:       # machine-dependent: never gated
+        return
     if isinstance(old, str) or isinstance(old, bool) or old is None:
         if old != new:
             problems.append(f"{path}.{key}: '{old}' -> '{new}'")
         return
     if not isinstance(old, (int, float)):
         return
-    band = _classify(key)
-    if band is None:
-        return
-    rel, abs_tol = band
+    rel, abs_tol = _classify(key)
     if new is None or (isinstance(new, float) and math.isnan(new)):
         problems.append(f"{path}.{key}: {old} -> {new}")
         return

@@ -40,7 +40,7 @@ def _registry():
         "hier": (hier_vs_flat, lambda q: dict(rounds=8 if q else 20), True),
         "compress": (compress_sweep,
                      lambda q: dict(rounds=8 if q else 16), True),
-        "kernels": (kernel_bench, lambda q: {}, False),
+        "kernels": (kernel_bench, lambda q: dict(quick=q), True),
         "roofline": (roofline_report, lambda q: {}, False),
     }
 

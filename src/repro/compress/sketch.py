@@ -9,11 +9,11 @@ per-round ``seed``, and re-drawing S each round decorrelates the
 reconstruction noise that error feedback re-injects.
 
   * :class:`SignSketch` — dense Rademacher projection ``S = R/√m``,
-    ``R ∈ {±1}^{m×n}``.  The apply is a memory-bound tall-skinny
-    contraction streamed by ``kernels.sketch`` (dispatch via
-    ``kernels.ops.sketch_apply``); the O(m·n) sign matrix is materialized
-    from the seed per call — a production deployment would generate signs
-    on the fly inside the kernel.
+    ``R ∈ {±1}^{m×n}``.  The apply streams through the counter-based RNG
+    kernel (``kernels.ops.sign_sketch``): R's entries are a pure hash of
+    (row, column, seed) generated on the fly inside the contraction, so the
+    O(m·n) sign matrix is **never materialized** — encode and decode both
+    touch only one (m, block) tile at a time, on every backend.
   * :class:`SRHTSketch` — structured subsampled randomized Hadamard
     transform ``S = √(N/m)·P·H_N/√N·D``: O(n log n) apply and O(n) state
     (the n sign flips + m sampled rows), no dense matrix at any point.
@@ -32,8 +32,20 @@ def _key(seed_base: int, seed: int) -> jax.Array:
     return jax.random.fold_in(jax.random.PRNGKey(seed_base), seed)
 
 
+def _seed32(seed_base: int, seed: int) -> jax.Array:
+    """Fold (seed_base, per-round seed) into the uint32 counter-RNG seed."""
+    x = (int(seed_base) * 0x9E3779B1 + int(seed) * 0x85EBCA6B
+         + 0x1B873593) & 0xFFFFFFFF
+    return jnp.uint32(x)
+
+
 class SignSketch(Compressor):
     """Signed random projection ``v ↦ R v / √m`` (unbiased: E[SᵀS] = I).
+
+    R is the implicit counter-based sign matrix of
+    :mod:`repro.kernels.rng_sketch`: regenerated tile-by-tile inside the
+    kernel from (row, column, seed) counters, identical on every backend,
+    never resident in memory.
 
     The decode applies the MMSE shrinkage ``m/(m+n+1)·Sᵀs``: the naive
     adjoint ``Sᵀs = SᵀS v`` inflates norms by ~n/m, which makes the
@@ -51,27 +63,25 @@ class SignSketch(Compressor):
             raise ValueError(f"sketch_dim must be >= 1, got {m}")
         self.m = int(m)
         self.seed_base = seed_base
-        self._cache = None          # (n, seed) -> S, see _matrix
 
-    def _matrix(self, n: int, seed: int) -> jax.Array:
-        # one-entry memo: EF's encode→decode pair (and every sender within a
-        # round) reuses the identical S, so regenerate only on (n, seed)
-        # change instead of 2× per vector
-        if self._cache is None or self._cache[0] != (n, seed):
-            r = jax.random.rademacher(_key(self.seed_base, seed),
-                                      (self.m, n), jnp.float32)
-            self._cache = ((n, seed), r / jnp.sqrt(jnp.float32(self.m)))
-        return self._cache[1]
+    def sign_matrix(self, n: int, seed: int = 0) -> jax.Array:
+        """Materialized ``S = R/√m`` — oracle for tests only; the encode /
+        decode paths never build this."""
+        from ..kernels.rng_sketch import rng_sign_matrix
+        r = rng_sign_matrix(_seed32(self.seed_base, seed), self.m, n)
+        return r / jnp.sqrt(jnp.float32(self.m))
 
     def encode(self, vec: jax.Array, seed: int = 0) -> Compressed:
         from ..kernels import ops
-        s = ops.sketch_apply(jnp.asarray(vec, jnp.float32)[None, :],
-                             self._matrix(int(vec.shape[0]), seed))[0]
+        s = ops.sign_sketch(jnp.asarray(vec, jnp.float32)[None, :],
+                            _seed32(self.seed_base, seed), self.m)[0]
         return Compressed(self.name, int(vec.shape[0]), (s,), seed)
 
     def decode(self, comp: Compressed) -> jax.Array:
+        from ..kernels import ops
         shrink = self.m / (self.m + comp.n + 1.0)
-        return shrink * (self._matrix(comp.n, comp.seed).T @ comp.data[0])
+        return shrink * ops.sign_sketch_adjoint(
+            comp.data[0], _seed32(self.seed_base, comp.seed), comp.n)
 
     def wire_floats(self, n: int) -> int:
         return self.m

@@ -28,7 +28,10 @@ import jax.numpy as jnp
 
 from .flatten import (scope_vector, select_scope, stacked_weighted_sum,
                       tree_add, tree_to_vector)
-from .gram import gram_and_cross, gram_residual
+from .gram import gram_residual
+# Gram reductions route through the backend-aware kernel registry
+# (repro.kernels): autotuned pallas/xla/ref dispatch, never interpret-mode
+from ..kernels.ops import gram_and_cross
 from .solve import SolveConfig, bound_value, solve_alpha, theorem1_reduction
 
 Pytree = Any

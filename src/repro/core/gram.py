@@ -9,11 +9,16 @@ axis (see DESIGN.md §2):
 ``U`` stacks the K flattened updates.  Everything downstream (the α solve,
 Theorem-1 bound) is O(K²) and replicated.
 
-Two execution paths:
+Execution paths:
   * ``gram_and_cross``            — pure jnp (reference / small models).
   * ``gram_and_cross_chunked``    — lax.scan streaming over n-chunks, the
     memory-bound formulation mirrored by the Pallas kernel in
-    ``repro.kernels.gram`` (which ops.py dispatches to on TPU).
+    ``repro.kernels.gram``.
+  * the production call sites (``core.aggregation``, ``hier.gateway``, the
+    fused round stages in ``hier.fused``) route through the backend-aware
+    registry ``repro.kernels.ops.gram_and_cross`` — autotuned dispatch over
+    compiled Pallas (TPU) / jit-compiled XLA (everywhere else) / this
+    module's reference math.
 
 Block composition (the hierarchical-aggregation identity, ``repro.hier``):
 partition the fleet's K updates into P groups U = [U_1; …; U_P].  Then G is

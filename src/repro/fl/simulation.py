@@ -18,7 +18,11 @@ each aggregation node waits for its members (timeout model: dropouts still
 cost their partial time), summarizes, and ships the summary one hop up —
 every hop is an event on the PR-1 scheduler, so round times are true
 multi-hop critical paths and the per-tier byte ledger measures the uplink
-saving the hierarchy exists for.  With ``HierConfig.compress`` set (the
+saving the hierarchy exists for.  The per-round array math runs on the
+fused engine (``repro.hier.fused``): flat (P, n) round matrices, one
+shape-keyed jit call per tier node, Gram reductions through the
+backend-aware kernel registry; ``HierSimulationResult.engine`` reports the
+real wall-clock split (first-round compile vs steady-state).  With ``HierConfig.compress`` set (the
 ``hier_contextual_sketch`` aggregator), every summary uplink instead
 carries an error-feedback-compressed payload (``repro.compress``): the
 ledger records true serialized sizes, downstream solves consistently use
@@ -29,7 +33,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field, replace as dc_replace
-from functools import partial
+from functools import lru_cache, partial
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -42,6 +46,43 @@ from .metrics import evaluate_classifier, global_train_loss
 from .server import RoundState, ServerConfig, build_round_fn, init_server, sample_round
 
 Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# process-wide compile caches: repeated simulations with the same client
+# hyper-parameters (tests, benchmark sweeps) reuse one compiled function
+# instead of re-jitting a fresh closure per run
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=32)
+def _client_update_fn(loss_fn: Callable, max_steps: int, batch_size: int,
+                      lr: float, mu: float) -> Callable:
+    """Jitted single-device ``client_update`` (async runtime)."""
+    return jax.jit(partial(client_update, loss_fn, max_steps=max_steps,
+                           batch_size=batch_size, lr=lr, mu=mu))
+
+
+@lru_cache(maxsize=32)
+def _batched_client_update_fn(loss_fn: Callable, max_steps: int,
+                              batch_size: int, lr: float, mu: float
+                              ) -> Callable:
+    """Jitted vmapped cohort ``client_update`` (hierarchical runtime)."""
+    upd = partial(client_update, loss_fn, max_steps=max_steps,
+                  batch_size=batch_size, lr=lr, mu=mu)
+
+    @jax.jit
+    def batch_update(params, xs, ys, ms, ns, keys):
+        return jax.vmap(lambda xx, yy, mm, n, k: upd(params, xx, yy, mm, n, k)
+                        )(xs, ys, ms, ns, keys)
+
+    return batch_update
+
+
+@lru_cache(maxsize=32)
+def _round_fn_cached(loss_fn: Callable, cfg: ServerConfig,
+                     samples_per_device: int) -> Callable:
+    """One compiled round function per (loss, config, shard size)."""
+    return build_round_fn(loss_fn, cfg, samples_per_device)
 
 
 @dataclass
@@ -75,7 +116,7 @@ def run_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                    cfg: ServerConfig, num_rounds: int,
                    selection_seed: int = 1234, eval_every: int = 1,
                    collect_alpha: bool = False) -> SimulationResult:
-    round_fn = build_round_fn(loss_fn, cfg, dataset.samples_per_device)
+    round_fn = _round_fn_cached(loss_fn, cfg, dataset.samples_per_device)
     steps_per_epoch = max(dataset.samples_per_device // cfg.batch_size, 1)
 
     state = init_server(jax.tree_util.tree_map(jnp.asarray, init_params))
@@ -167,8 +208,8 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
 
     steps_per_epoch = max(dataset.samples_per_device // cfg.batch_size, 1)
     max_steps = cfg.max_epochs * steps_per_epoch
-    upd = jax.jit(partial(client_update, loss_fn, max_steps=max_steps,
-                          batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu))
+    upd = _client_update_fn(loss_fn, max_steps, cfg.batch_size, cfg.lr,
+                           cfg.mu)
 
     params = jax.tree_util.tree_map(jnp.asarray, init_params)
     x = jnp.asarray(dataset.x)
@@ -264,6 +305,10 @@ class HierSimulationResult:
     dropped: int = 0            # these match AsyncSimulationResult semantics)
     rounds_skipped: int = 0     # rounds where every participant dropped out
     wall_time: float = 0.0
+    # real-wall-clock engine stats (satellite: compile vs steady-state):
+    # compile_wall_time_s (first round, pays the jit compiles),
+    # steady_wall_time_per_round_s (median of the rest), rounds_wall_time_s
+    engine: Dict[str, float] = field(default_factory=dict)
 
     def time_to_accuracy(self, level: float) -> Optional[float]:
         return self.to_curve().time_to_accuracy(level)
@@ -298,14 +343,14 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     # Imported lazily: repro.hier imports repro.edge which imports repro.fl,
     # so the reverse edge must not exist at import time.
     from ..compress import ErrorFeedback, payload_gram
-    from ..core.flatten import tree_to_vector, vector_to_tree
     from ..edge.events import EventKind, EventScheduler
     from ..edge.wallclock import model_flops_per_step, model_payload_bytes
     from ..hier.comm import (CommLedger, compressed_summary_bytes,
                              summary_bytes, update_bytes)
-    from ..hier.gateway import (CompressedSummary, weighted_mean_trees,
-                                merge_summaries, summarize_updates)
-    from ..hier.hier_server import blockdiag_diagnostics, cloud_aggregate
+    from ..hier.fused import (HierRoundEngine, apply_delta, flatten_stacked,
+                              gather_mean)
+    from ..hier.gateway import CompressedSummary, GatewaySummary
+    from ..hier.hier_server import blockdiag_diagnostics
 
     fleet = topology.fleet
     if dataset.num_devices < fleet.num_devices:
@@ -314,13 +359,8 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
 
     steps_per_epoch = max(dataset.samples_per_device // cfg.batch_size, 1)
     max_steps = cfg.max_epochs * steps_per_epoch
-    upd = partial(client_update, loss_fn, max_steps=max_steps,
-                  batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu)
-
-    @jax.jit
-    def batch_update(params, xs, ys, ms, ns, keys):
-        return jax.vmap(lambda xx, yy, mm, n, k: upd(params, xx, yy, mm, n, k)
-                        )(xs, ys, ms, ns, keys)
+    batch_update = _batched_client_update_fn(loss_fn, max_steps,
+                                             cfg.batch_size, cfg.lr, cfg.mu)
 
     params = jax.tree_util.tree_map(jnp.asarray, init_params)
     x = jnp.asarray(dataset.x)
@@ -342,6 +382,11 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     solve_cfg = cfg.solve_config()
     relay = cfg.aggregator == "hier_relay"
     tier_mode = cfg.tier_mode
+    # The fused round engine (repro.hier.fused): summaries carry FLAT f32
+    # vectors for ū/ĝ and every tier stage is one shape-keyed jit call;
+    # only the final cloud delta converts back to the parameter tree.
+    engine = HierRoundEngine(params, solve_cfg, tier_mode, cfg.gram_scope)
+    cloud_kind = "fedavg" if cfg.aggregator == "hier_fedavg" else "combo"
 
     # Summary compression (repro.compress): every compressing sender keeps
     # per-sender error-feedback residuals that persist ACROSS rounds, and
@@ -364,8 +409,10 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         return list(reversed(path))         # cloud-side hop first
 
     result = HierSimulationResult(name=name)
+    round_walls: List[float] = []
     t0 = time.time()
     for t in range(num_rounds):
+        round_t0 = time.perf_counter()
         round_start = scheduler.now
         # -- selection (identical-selection protocol: one shared RNG) -------
         participants: List[tuple] = []      # (device_id, gateway_id)
@@ -400,21 +447,25 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             base_key, jnp.arange(t * P, (t + 1) * P, dtype=jnp.uint32))
         deltas, grads = batch_update(params, x[sel], y[sel], mask[sel],
                                      jnp.asarray(num_steps), keys)
-        take = lambda stacked, i: jax.tree_util.tree_map(
-            lambda l: l[i], stacked)
-        # participant index -> decoded device (update, gradient) — device-
-        # uplink compression only; everything downstream uses what arrived,
-        # so the ledger prices exactly what the solves consume
-        dev_decoded: Dict[int, Pytree] = {}
-        dev_decoded_g: Dict[int, Pytree] = {}
+        # the fused hot path: the round's updates/gradients as (P, n) f32
+        # matrices — cohort slicing below is a single gather per tier node
+        D = flatten_stacked(deltas)
+        GM = flatten_stacked(grads)
+        # participant index -> decoded device (update, gradient) vectors —
+        # device-uplink compression only; everything downstream uses what
+        # arrived, so the ledger prices exactly what the solves consume
+        dev_decoded: Dict[int, jax.Array] = {}
+        dev_decoded_g: Dict[int, jax.Array] = {}
 
-        def take_delta(i):
-            d = dev_decoded.get(i)
-            return take(deltas, i) if d is None else d
-
-        def take_grad(i):
-            d = dev_decoded_g.get(i)
-            return take(grads, i) if d is None else d
+        def member_matrices(idxs):
+            """(U, GR) rows for a cohort — only used on the decode-aware
+            slow path (device-uplink compression replaced some rows); the
+            common path gathers inside the jitted stages instead."""
+            U = jnp.stack([dev_decoded.get(int(i), D[int(i)])
+                           for i in idxs])
+            GR = jnp.stack([dev_decoded_g.get(int(i), GM[int(i)])
+                            for i in idxs])
+            return U, GR
 
         # -- event loop: device terminals, then multi-hop transfers ---------
         # Contextual tiers run a gradient pre-pass: each gateway ships its
@@ -485,8 +536,7 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                 send_up("summary", node, list(idxs),
                         len(idxs) * update_bytes(n_model))
             elif use_prepass:
-                ghat_g = weighted_mean_trees(
-                    [take(grads, i) for i in idxs], np.ones(len(idxs)))
+                ghat_g = gather_mean(GM, jnp.asarray(idxs))
                 send_up("grad", node, (ghat_g, len(idxs)),
                         update_bytes(n_model))
             else:   # no pre-pass: solve (or average) against the cohort's
@@ -503,39 +553,67 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             # §III-C at the gateway tier: a fan-in-sampled cohort prices the
             # pool it was drawn from, exactly like contextual_expected flat
             pool = len(topology.nodes[gid].children)
-            pool_size = (pool if cfg.fan_in is not None and cfg.fan_in < pool
-                         else None)
-            return summarize_updates(
-                gid, [participants[i][0] for i in idxs],
-                [take_delta(i) for i in idxs],
-                [take_grad(i) for i in idxs],
-                [1] * len(idxs), solve_cfg, tier_mode, cfg.gram_scope,
-                solve_grad=solve_grad, pool_size=pool_size)
+            pool_scale = ((pool - 1) / max(len(idxs) - 1, 1)
+                          if cfg.fan_in is not None and cfg.fan_in < pool
+                          and tier_mode == "contextual" else 1.0)
+            ones = jnp.ones((len(idxs),), jnp.float32)
+            if dev_decoded:
+                U, GR = member_matrices(idxs)
+                stage = engine.tier(len(idxs), pool_scale=pool_scale)
+                out = stage(U, GR, ones, solve_grad)
+            else:
+                stage = engine.tier(len(idxs), pool_scale=pool_scale,
+                                    gather=True)
+                out = stage(D, GM, jnp.asarray(np.asarray(idxs, np.int64)),
+                            ones, solve_grad)
+            return GatewaySummary(
+                node_id=gid, num_updates=len(idxs),
+                member_ids=np.asarray([participants[i][0] for i in idxs],
+                                      np.int64),
+                G=out["G"], c=out["c"], alpha=out["alpha"],
+                u_bar=out["u_bar"], grad_est=out["ghat"], info=out["info"])
+
+        def _merge_summaries(nid, kids, solve_grad):
+            """Parent-tier merge over what actually arrived: the children's
+            ū vectors become this node's members (mass-conserving Σγ=1
+            stage, see ``hier.gateway.merge_summaries``)."""
+            counts = np.asarray([s.num_updates for s in kids], np.float32)
+            stage = engine.tier(len(kids), sum_to=1.0)
+            out = stage(jnp.stack([s.u_bar for s in kids]),
+                        jnp.stack([s.grad_est for s in kids]),
+                        jnp.asarray(counts), solve_grad)
+            return GatewaySummary(
+                node_id=nid, num_updates=int(counts.sum()),
+                member_ids=np.asarray([s.node_id for s in kids], np.int64),
+                G=out["G"], c=out["c"], alpha=out["alpha"],
+                u_bar=out["u_bar"], grad_est=out["ghat"], info=out["info"])
 
         def _compress_summary(s, nid):
             """EF-compress one summary's (ū, ĝ) for its uplink hop; returns
             (payload, wire bytes).  The same per-round sketch seed is shared
             by every node and both vectors, so sketched cross-terms compose
             at the cloud; residual state is per (vector, node)."""
-            comp_u, u_hat = ef.step(("u", nid), tree_to_vector(s.u_bar),
-                                    comp_u_c, seed=t)
-            comp_g, g_hat = ef.step(("g", nid), tree_to_vector(s.grad_est),
-                                    comp_g_c, seed=t)
-            decoded = dc_replace(s, u_bar=vector_to_tree(u_hat, params),
-                                 grad_est=vector_to_tree(g_hat, params))
+            comp_u, u_hat = ef.step(("u", nid), s.u_bar, comp_u_c, seed=t)
+            comp_g, g_hat = ef.step(("g", nid), s.grad_est, comp_g_c, seed=t)
+            decoded = dc_replace(s, u_bar=u_hat, grad_est=g_hat)
             nbytes = compressed_summary_bytes(comp_u.nbytes + comp_g.nbytes)
             return CompressedSummary(decoded, comp_u, comp_g), nbytes
+
+        def _weighted_mean_vecs(vecs, counts):
+            w = np.asarray(counts, np.float64)
+            w = w / max(float(w.sum()), 1e-12)
+            return jnp.asarray(w, jnp.float32) @ jnp.stack(vecs)
 
         def on_grad_complete(nid):
             nonlocal ghat_global
             node = topology.nodes[nid]
-            entries = recv_grad[nid]         # [(sender, ĝ subtree, count)]
+            entries = recv_grad[nid]         # [(sender, ĝ vector, count)]
             if not entries:
                 if node.parent is not None:
                     gone_up(nid, out_grad, on_grad_complete)
                 return
             counts = np.asarray([c for _, _, c in entries], np.float64)
-            ghat = weighted_mean_trees([g for _, g, _ in entries], counts)
+            ghat = _weighted_mean_vecs([g for _, g, _ in entries], counts)
             if node.parent is None:          # cloud: broadcast the global ĝ
                 ghat_global = ghat
                 for sender, _, _ in entries:
@@ -574,14 +652,11 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             elif compressing:
                 # merge over what actually arrived (the decodes), then
                 # re-compress with this node's own error-feedback state
-                s = merge_summaries(nid, [p.summary for p in kids],
-                                    solve_cfg, tier_mode, cfg.gram_scope,
-                                    solve_grad=node_ghat.get(nid))
+                s = _merge_summaries(nid, [p.summary for p in kids],
+                                     node_ghat.get(nid))
                 send_up("summary", node, *_compress_summary(s, nid))
             else:
-                s = merge_summaries(nid, kids, solve_cfg, tier_mode,
-                                    cfg.gram_scope,
-                                    solve_grad=node_ghat.get(nid))
+                s = _merge_summaries(nid, kids, node_ghat.get(nid))
                 send_up("summary", node, s,
                         summary_bytes(len(kids), n_model,
                                       include_grad=not use_prepass))
@@ -591,7 +666,8 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             if payload is None:              # every participant dropped out
                 result.rounds_skipped += 1
             else:
-                params, round_info = _cloud_stage(payload)
+                delta, round_info = _cloud_stage(payload)
+                params = apply_delta(params, delta)
             cloud_done = True
 
         def _cloud_stage(payload):
@@ -603,22 +679,19 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                 scale = ((pool - 1) / max(len(payload) - 1, 1)
                          if cfg.fan_in is not None and cfg.fan_in < pool
                          and not relay and tier_mode == "contextual" else 1.0)
-                if dev_decoded:                  # device-uplink compression
-                    stacked = jax.tree_util.tree_map(
-                        lambda *ls: jnp.stack(ls),
-                        *[take_delta(int(i)) for i in payload])
-                    grad_est = weighted_mean_trees(
-                        [take_grad(int(i)) for i in payload],
-                        np.ones(len(payload)))
-                else:
-                    idxs = jnp.asarray(np.asarray(payload))
-                    stacked = jax.tree_util.tree_map(lambda l: l[idxs],
-                                                     deltas)
-                    grad_est = jax.tree_util.tree_map(
-                        lambda l: jnp.mean(l[idxs], axis=0), grads)
-                return cloud_aggregate(params, stacked, grad_est,
-                                       [1] * len(payload), cfg, combos=False,
-                                       solve_scale=scale)
+                kind = ("fedavg" if cfg.aggregator == "hier_fedavg"
+                        else "raw")
+                ones = jnp.ones((len(payload),), jnp.float32)
+                if dev_decoded:
+                    U, GR = member_matrices(payload)
+                    stage = engine.cloud(len(payload), kind,
+                                         solve_scale=scale)
+                    return stage(U, jnp.mean(GR, axis=0), ones)
+                stage = engine.cloud(len(payload), kind, solve_scale=scale,
+                                     gather=True)
+                return stage(D, GM,
+                             jnp.asarray(np.asarray(payload, np.int64)),
+                             ones)
             if compressing:                      # compressed child summaries
                 csums = payload
                 summaries = [p.summary for p in csums]
@@ -630,26 +703,26 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                                     [p.comp_u for p in csums],
                                     [p.comp_g for p in csums],
                                     np.asarray(counts, np.float64))
-                stacked = jax.tree_util.tree_map(
-                    lambda *ls: jnp.stack(ls), *[s.u_bar for s in summaries])
-                grad_est = weighted_mean_trees(
-                    [s.grad_est for s in summaries], np.asarray(counts))
+                ghat = _weighted_mean_vecs([s.grad_est for s in summaries],
+                                           counts)
                 # no blockdiag diagnostics: the K_g² Gram blocks stayed at
                 # the gateways — that is where the byte saving comes from
-                return cloud_aggregate(params, stacked, grad_est, counts,
-                                       cfg, gram_override=G2c2)
+                stage = engine.cloud(len(summaries), "combo")
+                return stage(jnp.stack([s.u_bar for s in summaries]), ghat,
+                             jnp.asarray(counts, jnp.float32),
+                             override=G2c2)
             summaries = payload              # top-tier child summaries
-            stacked = jax.tree_util.tree_map(
-                lambda *ls: jnp.stack(ls), *[s.u_bar for s in summaries])
             counts = [s.num_updates for s in summaries]
-            grad_est = (ghat_global if ghat_global is not None else
-                        weighted_mean_trees([s.grad_est for s in summaries],
-                                             np.asarray(counts)))
-            new_params, info = cloud_aggregate(params, stacked, grad_est,
-                                               counts, cfg)
+            ghat = (ghat_global if ghat_global is not None else
+                    _weighted_mean_vecs([s.grad_est for s in summaries],
+                                        counts))
+            stage = engine.cloud(len(summaries), cloud_kind)
+            delta, info = stage(jnp.stack([s.u_bar for s in summaries]),
+                                ghat, jnp.asarray(counts, jnp.float32))
+            info = dict(info)
             info.update(blockdiag_diagnostics(summaries, info["gamma"],
                                               cfg.smoothness))
-            return new_params, info
+            return delta, info
 
         max_events = 8 * (P + len(topology.nodes)) + 64
         for _ in range(max_events):
@@ -688,15 +761,12 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                         # shipped the update would be under-priced.
                         i = idx_of[evt.device_id]
                         comp_d, vhat = ef.step(
-                            ("dev", evt.device_id),
-                            tree_to_vector(take(deltas, i)), comp_u_c,
-                            seed=t)
+                            ("dev", evt.device_id), D[i], comp_u_c, seed=t)
                         comp_dg, ghat = ef.step(
-                            ("devg", evt.device_id),
-                            tree_to_vector(take(grads, i)), comp_g_c,
+                            ("devg", evt.device_id), GM[i], comp_g_c,
                             seed=t)
-                        dev_decoded[i] = vector_to_tree(vhat, params)
-                        dev_decoded_g[i] = vector_to_tree(ghat, params)
+                        dev_decoded[i] = vhat
+                        dev_decoded_g[i] = ghat
                         ledger.record_up(topology.nodes[gid].tier,
                                          comp_d.nbytes + comp_dg.nbytes)
                     else:
@@ -710,6 +780,7 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         if not cloud_done:
             raise RuntimeError(f"round {t}: exceeded {max_events} events")
         result.dispatched += P
+        round_walls.append(time.perf_counter() - round_t0)
 
         if collect_gamma and "gamma" in round_info:
             result.gamma_history.append(np.asarray(round_info["gamma"]))
@@ -724,4 +795,11 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     result.comm = ledger.report()
     result.cloud_uplink_bytes = ledger.cloud_uplink_bytes
     result.total_bytes = ledger.total_bytes()
+    if round_walls:
+        steady = round_walls[1:] if len(round_walls) > 1 else round_walls
+        result.engine = {
+            "compile_wall_time_s": round_walls[0],
+            "steady_wall_time_per_round_s": float(np.median(steady)),
+            "rounds_wall_time_s": float(np.sum(round_walls)),
+        }
     return result

@@ -1,0 +1,275 @@
+"""Fused jit-compiled stages for the hierarchical round hot path.
+
+PR-3's ``run_hier_simulation`` did its per-round tier walk in pure Python
+over pytrees: per-member ``tree_map`` slicing, eager Gram/solve/combine per
+gateway, float-by-float tree means — thousands of op dispatches per round,
+plus recompiles whenever a dropout changed a cohort shape.  This module
+replaces all of it with a small set of **shape-keyed compiled stages** over
+flat update matrices:
+
+  * the round's stacked client updates/gradients are flattened ONCE into
+    (P, n) f32 matrices (:func:`flatten_stacked`, jit);
+  * every tier node (gateway summary, regional/cloud merge, cloud apply)
+    runs ONE jitted stage call — cohort slicing is a single gather, the
+    Gram/solve/combine and all bound diagnostics live inside the stage;
+  * stages are cached process-wide by their static key (kind, K, n, solve
+    config, tier mode, pool scale, scope), so a fleet whose cohort sizes
+    repeat across rounds compiles each distinct shape exactly once — the
+    ledger/event bookkeeping stays in Python, but every array op crosses
+    the jit boundary once per round shape.
+
+The Gram reduction inside each stage is the implementation the kernel
+registry selected for that shape (:func:`repro.kernels.select_impl`), so the
+backend-aware dispatch of ``kernels/`` carries into the fused path: Pallas
+on TPU, compiled pure-XLA elsewhere.
+
+Numerically each stage mirrors ``gateway.summarize_updates`` /
+``hier_server.cloud_aggregate`` (same solve, same combine, same info keys);
+``tests/test_hier.py`` pins stage outputs against the reference functions.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.flatten import select_scope, tree_add, vector_to_tree
+from ..core.solve import (SolveConfig, bound_value, solve_alpha,
+                          theorem1_reduction)
+from ..core.gram import gram_residual
+from ..kernels.registry import select_impl_for
+
+Pytree = Any
+
+
+def _gram_impl(K: int, ns: int):
+    """The registry's pick for a (K, ns) Gram reduction — resolved on every
+    stage lookup (cheap: shape specs, no arrays) so an active
+    ``force_backend``/env override reaches the fused path too; the stage
+    cache below keys on the chosen backend, so a different choice compiles
+    its own stage instead of silently reusing the old one."""
+    return select_impl_for(
+        "gram", jax.ShapeDtypeStruct((K, ns), jnp.float32),
+        jax.ShapeDtypeStruct((ns,), jnp.float32))
+
+
+@jax.jit
+def flatten_stacked(stacked: Pytree) -> jax.Array:
+    """Stacked update pytree (leading K axis per leaf) → (K, n) f32 matrix.
+    Delegates to the aggregation registry's flattener so the 'leaf order
+    matches ``core.flatten.tree_to_vector``' invariant lives in one place
+    (``scope_indices`` and ``apply_delta`` both depend on it)."""
+    from ..core.aggregation import _stacked_to_matrix
+    return _stacked_to_matrix(stacked, None)
+
+
+@jax.jit
+def apply_delta(params: Pytree, delta_vec: jax.Array) -> Pytree:
+    """``w ← w + Δ`` with a flat Δ — the single tree conversion per round."""
+    return tree_add(params, vector_to_tree(delta_vec, params))
+
+
+def scope_indices(template: Pytree, scope: Optional[str]
+                  ) -> Optional[np.ndarray]:
+    """Flat-vector column indices selected by ``gram_scope`` (None → full)."""
+    if scope is None or scope == "full":
+        return None
+    leaves = jax.tree_util.tree_leaves(template)
+    kept = [l.size > 0
+            for l in jax.tree_util.tree_leaves(select_scope(template, scope))]
+    idx, offset = [], 0
+    for leaf, keep in zip(leaves, kept):
+        if keep:
+            idx.append(np.arange(offset, offset + leaf.size, dtype=np.int64))
+        offset += leaf.size
+    return np.concatenate(idx) if idx else np.zeros((0,), np.int64)
+
+
+# process-wide stage cache: same static key → same compiled callable.  The
+# key includes the gram backend the registry selected, so backend forcing
+# or a different autotune outcome gets its own compiled stage.
+_STAGES: Dict[Tuple, Callable] = {}
+
+
+def clear_stage_cache() -> None:
+    _STAGES.clear()
+
+
+def _scoped(U: jax.Array, g: jax.Array, idx) -> Tuple[jax.Array, jax.Array]:
+    return (U, g) if idx is None else (U[:, idx], g[idx])
+
+
+@jax.jit
+def gather_mean(M: jax.Array, sel: jax.Array) -> jax.Array:
+    """Mean of the selected rows, gathered inside jit (one dispatch)."""
+    return jnp.mean(M[sel], axis=0)
+
+
+def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
+                  pool_scale: float = 1.0, sum_to: Optional[float] = None,
+                  gather: bool = False, scope_key=None,
+                  scope_idx=None) -> Callable:
+    """Compiled tier stage — the fused equivalent of
+    ``gateway.summarize_updates`` (``sum_to=1`` makes it the parent-tier
+    merge).  Returns a dict with keys G, c, alpha, u_bar, ghat, info.
+
+    ``gather=False``: ``fn(U (K,n), GR (K,n), counts (K,), g?)`` over
+    pre-stacked members.  ``gather=True``: ``fn(D (P,n), GM (P,n),
+    sel (K,), counts, g?)`` — the cohort rows are gathered *inside* the jit
+    boundary (an eager advanced-index on the round matrices costs a full
+    dispatch per tier node; fused it is free)."""
+    ns = n if scope_idx is None else len(scope_idx)
+    gram_impl = _gram_impl(K, ns)
+    key = ("summary", K, n, solve_cfg, mode, pool_scale, sum_to, gather,
+           scope_key, gram_impl.backend)
+    fn = _STAGES.get(key)
+    if fn is not None:
+        return fn
+
+    cfg = solve_cfg
+    if pool_scale != 1.0:
+        cfg = replace(cfg, expectation_scale=cfg.expectation_scale
+                      * pool_scale)
+    if sum_to is not None:
+        cfg = replace(cfg, sum_to=sum_to)
+    gram_fn = gram_impl.fn
+    idx = None if scope_idx is None else jnp.asarray(scope_idx)
+    beta = cfg.beta
+
+    def body(U, GR, counts, g):
+        w = counts / jnp.maximum(jnp.sum(counts), 1e-12)
+        ghat = w @ GR
+        g_solve = ghat if g is None else g
+        Us, gs = _scoped(U, g_solve, idx)
+        G, c = gram_fn(Us, gs)
+        if mode == "contextual":
+            alpha = solve_alpha(G, c, cfg)
+            info = {
+                "bound": bound_value(G, c, alpha, beta),
+                "theorem1_reduction": theorem1_reduction(G, alpha, beta),
+                "stationarity_residual": jnp.linalg.norm(
+                    gram_residual(G, c, alpha, beta)),
+            }
+        else:                                   # "mean" (hier-FedAvg tier)
+            alpha = w
+            info = {"bound": bound_value(G, c, alpha, beta)}
+        u_bar = alpha @ U
+        return {"G": G, "c": c, "alpha": alpha, "u_bar": u_bar,
+                "ghat": ghat, "info": info}
+
+    if gather:
+        @jax.jit
+        def stage(D, GM, sel, counts, g=None):
+            return body(D[sel], GM[sel], counts, g)
+    else:
+        @jax.jit
+        def stage(U, GR, counts, g=None):
+            return body(U, GR, counts, g)
+
+    _STAGES[key] = stage
+    return stage
+
+
+def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
+                solve_scale: float = 1.0, gather: bool = False,
+                scope_key=None, scope_idx=None) -> Callable:
+    """Compiled final tier: ``fn(U (P,n), ghat (n,), counts, override?) →
+    (delta (n,), info)`` — the fused equivalent of
+    ``hier_server.cloud_aggregate``.
+
+    ``kind``: "combo" (mass-conserving Σγ=1 solve over child combinations),
+    "raw" (unconstrained paper solve over raw updates — star/relay; with the
+    §III-C ``solve_scale`` for fan-in-sampled star clouds), or "fedavg"
+    (count-weighted mean).  ``override`` supplies sketched (G₂, c₂) for the
+    compressed pipeline.  With ``gather=True`` the signature becomes
+    ``fn(D (Pr,n), GM (Pr,n), sel (P,), counts)``: cohort rows are gathered
+    and the ∇f estimate averaged inside the jit boundary."""
+    ns = n if scope_idx is None else len(scope_idx)
+    gram_impl = _gram_impl(P, ns)
+    key = ("cloud", P, n, solve_cfg, kind, solve_scale, gather, scope_key,
+           gram_impl.backend)
+    fn = _STAGES.get(key)
+    if fn is not None:
+        return fn
+
+    cfg = solve_cfg
+    if kind == "combo":
+        cfg = replace(cfg, sum_to=1.0)
+    elif solve_scale != 1.0:
+        cfg = replace(cfg, expectation_scale=cfg.expectation_scale
+                      * solve_scale)
+    gram_fn = gram_impl.fn
+    idx = None if scope_idx is None else jnp.asarray(scope_idx)
+    beta = cfg.beta
+
+    def body(U, ghat, counts, override):
+        if kind == "fedavg":
+            alpha = counts / jnp.maximum(jnp.sum(counts), 1e-12)
+            info = {"alpha": alpha, "gamma": alpha}
+            return alpha @ U, info
+        if override is not None:
+            G, c = override
+        else:
+            Us, gs = _scoped(U, ghat, idx)
+            G, c = gram_fn(Us, gs)
+        alpha = solve_alpha(G, c, cfg)
+        info = {
+            "alpha": alpha,
+            "gamma": alpha,
+            "bound": bound_value(G, c, alpha, beta),
+            "theorem1_reduction": theorem1_reduction(G, alpha, beta),
+            "stationarity_residual": jnp.linalg.norm(
+                gram_residual(G, c, alpha, beta)),
+            "gram_diag": jnp.diag(G),
+        }
+        return alpha @ U, info
+
+    if gather:
+        @jax.jit
+        def stage(D, GM, sel, counts, override=None):
+            return body(D[sel], jnp.mean(GM[sel], axis=0), counts, override)
+    else:
+        @jax.jit
+        def stage(U, ghat, counts, override=None):
+            return body(U, ghat, counts, override)
+
+    _STAGES[key] = stage
+    return stage
+
+
+class HierRoundEngine:
+    """Per-run façade over the stage cache: resolves the static keys
+    (model width, solve config, tier mode, gram scope) once, then hands the
+    runtime one-call compiled stages."""
+
+    def __init__(self, params_template: Pytree, solve_cfg: SolveConfig,
+                 tier_mode: str, gram_scope: Optional[str] = None):
+        self.n = int(sum(l.size for l in
+                         jax.tree_util.tree_leaves(params_template)))
+        self.solve_cfg = solve_cfg
+        self.tier_mode = tier_mode
+        self.gram_scope = gram_scope
+        self._scope_idx = scope_indices(params_template, gram_scope)
+        self._scope_key = (None if self._scope_idx is None else
+                           (gram_scope, len(self._scope_idx),
+                            hash(self._scope_idx.tobytes())))
+
+    # -- stage accessors ----------------------------------------------------
+
+    def tier(self, K: int, *, pool_scale: float = 1.0,
+             sum_to: Optional[float] = None,
+             gather: bool = False) -> Callable:
+        return summary_stage(K, self.n, self.solve_cfg, self.tier_mode,
+                             pool_scale=pool_scale, sum_to=sum_to,
+                             gather=gather, scope_key=self._scope_key,
+                             scope_idx=self._scope_idx)
+
+    def cloud(self, P: int, kind: str, *, solve_scale: float = 1.0,
+              gather: bool = False) -> Callable:
+        return cloud_stage(P, self.n, self.solve_cfg, kind,
+                           solve_scale=solve_scale, gather=gather,
+                           scope_key=self._scope_key,
+                           scope_idx=self._scope_idx)

@@ -19,6 +19,12 @@ single child's combination unchanged.
 With a single gateway containing the whole fleet the two-stage solve
 collapses to the flat one *exactly* (the cloud rescale γ = 1 at the gateway's
 stationary point) — tested in ``tests/test_hier.py``.
+
+These pytree-level functions are the REFERENCE implementation: the runtime
+(``run_hier_simulation``) executes the same math through the fused
+jit-compiled stages of ``repro.hier.fused`` over flat update matrices, and
+``tests/test_backend_equiv.py`` pins the fused stages against these
+functions.
 """
 from __future__ import annotations
 
@@ -30,7 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.flatten import scope_vector, stacked_weighted_sum
-from ..core.gram import gram_and_cross, gram_residual
+from ..core.gram import gram_residual
+from ..kernels.ops import gram_and_cross
 from ..core.solve import SolveConfig, bound_value, solve_alpha, theorem1_reduction
 
 Pytree = Any

@@ -37,6 +37,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..compress import CompressConfig
 from ..core.aggregation import (AggregatorConfig, aggregate,
@@ -142,16 +143,24 @@ def blockdiag_diagnostics(summaries: Sequence[GatewaySummary],
     hierarchy elides — zero in this view) prices that α under the
     block-diagonal Gram, giving the cloud a full-fleet bound estimate
     without ever seeing a raw update.
+
+    Computed in numpy on purpose: the block sizes change whenever a dropout
+    changes a cohort, and a jnp ``block_diag`` re-compiles per shape combo —
+    on the per-round hot path that recompile dwarfed the O(K²) arithmetic.
     """
-    G_blockdiag = jax.scipy.linalg.block_diag(*[s.G for s in summaries])
-    c_full = jnp.concatenate([s.c for s in summaries])
-    alpha_full = jnp.concatenate(
-        [gamma[g] * s.alpha for g, s in enumerate(summaries)])
+    gam = np.asarray(gamma)
+    Gs = [np.asarray(s.G, np.float64) for s in summaries]
+    cs = [np.asarray(s.c, np.float64) for s in summaries]
+    als = [np.asarray(s.alpha, np.float64) for s in summaries]
+    alpha_full = np.concatenate([gam[g] * a for g, a in enumerate(als)])
+    c_full = np.concatenate(cs)
+    quad = sum(float(a @ G @ a) * gam[g] * gam[g]
+               for g, (G, a) in enumerate(zip(Gs, als)))
     return {
         "alpha_effective": alpha_full,
-        "blockdiag_bound": bound_value(G_blockdiag, c_full, alpha_full, beta),
-        "tier1_theorem1_reductions": jnp.stack(
-            [theorem1_reduction(s.G, s.alpha, beta) for s in summaries]),
+        "blockdiag_bound": float(c_full @ alpha_full) + 0.5 * beta * quad,
+        "tier1_theorem1_reductions": np.asarray(
+            [0.5 * beta * float(a @ G @ a) for G, a in zip(Gs, als)]),
         "devices_represented": int(sum(s.num_updates for s in summaries)),
     }
 

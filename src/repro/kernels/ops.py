@@ -1,8 +1,17 @@
-"""Jit'd dispatch wrappers for the Pallas kernels.
+"""Public kernel entry points, dispatched through the backend registry.
 
-On TPU the kernels run compiled (``interpret=False``); everywhere else they
-run in interpret mode or fall back to the jnp oracle.  ``backend()`` picks
-automatically; tests exercise both paths.
+Each op registers three implementations (see :mod:`repro.kernels.registry`):
+``pallas`` (compiled on TPU, interpret-mode validation elsewhere), ``xla``
+(jit-compiled pure-jnp — the off-TPU production path) and ``ref`` (the eager
+jnp oracle).  The first call per (op, shape-bucket, platform) micro-autotunes
+among the eligible backends and caches the winner in-process; interpret-mode
+Pallas is never an autotune candidate off-TPU, so off-TPU runs never pay
+interpret overhead — the PR-3 wrappers' inconsistent ``use_pallas or not
+on_tpu()`` defaults are gone.
+
+Back-compat forcing: ``use_pallas=True`` pins the Pallas path (interpret
+off-TPU — the end-to-end kernel validation tests), ``use_pallas=False`` pins
+the reference oracle; ``backend=`` names any registered backend directly.
 """
 from __future__ import annotations
 
@@ -15,84 +24,210 @@ from . import ref
 from .combine import combine_pallas
 from .decode_attn import flash_decode_pallas
 from .gram import gram_block_pallas, gram_pallas
+from .registry import (backends, dispatch, force_backend, on_tpu,
+                       register_impl, select_impl)
+from .rng_sketch import rng_sketch_pallas, rng_sketch_xla, \
+    rng_sketch_adjoint_xla
 from .sketch import sketch_apply_pallas
 from .topk import topk_select_pallas
 
+__all__ = ["on_tpu", "gram_and_cross", "gram_block_and_cross",
+           "sketch_apply", "topk_select", "weighted_combine", "sign_sketch",
+           "sign_sketch_adjoint", "flash_decode", "lse_merge",
+           "backends", "dispatch", "force_backend", "select_impl"]
 
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+
+def _not_interpret() -> bool:
+    # Pallas autotune eligibility: compiled on TPU only; interpret mode is a
+    # correctness path, never a contender
+    return on_tpu()
+
+
+def _backend_for(use_pallas: Optional[bool],
+                 backend: Optional[str]) -> Optional[str]:
+    if backend is not None:
+        return backend
+    if use_pallas is None:
+        return None                   # registry decides (autotune)
+    return "pallas" if use_pallas else "ref"
+
+
+# --------------------------------------------------------------- gram ops
+
+register_impl("gram", "pallas",
+              lambda u, g, block_n=2048: gram_pallas(
+                  u, g, block_n=block_n, interpret=not on_tpu()),
+              eligible=_not_interpret)
+_gram_xla_jit = jax.jit(ref.gram_ref)
+register_impl("gram", "xla",
+              lambda u, g, block_n=2048: _gram_xla_jit(u, g))
+register_impl("gram", "ref", lambda u, g, block_n=2048: ref.gram_ref(u, g))
 
 
 def gram_and_cross(updates: jax.Array, grad: jax.Array, *,
                    use_pallas: Optional[bool] = None,
-                   block_n: int = 2048) -> Tuple[jax.Array, jax.Array]:
+                   block_n: int = 2048,
+                   backend: Optional[str] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
     """Fused G = U Uᵀ, c = U g.  updates (K, n), grad (n,)."""
-    use_pallas = on_tpu() if use_pallas is None else use_pallas
-    if use_pallas or not on_tpu():
-        # interpret=True on CPU validates the kernel path end-to-end; on TPU
-        # the same call compiles for real.
-        return gram_pallas(updates, grad, block_n=block_n,
-                           interpret=not on_tpu())
-    return ref.gram_ref(updates, grad)
+    return dispatch("gram", updates, grad, block_n=block_n,
+                    backend=_backend_for(use_pallas, backend))
+
+
+register_impl("gram_block", "pallas",
+              lambda ua, ub, g, block_n=2048: gram_block_pallas(
+                  ua, ub, g, block_n=block_n, interpret=not on_tpu()),
+              eligible=_not_interpret)
+_gram_block_xla_jit = jax.jit(ref.gram_block_ref)
+register_impl("gram_block", "xla",
+              lambda ua, ub, g, block_n=2048: _gram_block_xla_jit(ua, ub, g))
+register_impl("gram_block", "ref",
+              lambda ua, ub, g, block_n=2048: ref.gram_block_ref(ua, ub, g))
 
 
 def gram_block_and_cross(ua: jax.Array, ub: jax.Array, grad: jax.Array, *,
                          use_pallas: Optional[bool] = None,
-                         block_n: int = 2048) -> Tuple[jax.Array, jax.Array]:
+                         block_n: int = 2048,
+                         backend: Optional[str] = None
+                         ) -> Tuple[jax.Array, jax.Array]:
     """One fused hierarchical-merge block: G_ab = U_a U_bᵀ AND c_a = U_a g
     (named apart from ``core.gram.gram_block``, which returns G alone)."""
-    use_pallas = on_tpu() if use_pallas is None else use_pallas
-    if use_pallas or not on_tpu():
-        return gram_block_pallas(ua, ub, grad, block_n=block_n,
-                                 interpret=not on_tpu())
-    return ref.gram_block_ref(ua, ub, grad)
+    return dispatch("gram_block", ua, ub, grad, block_n=block_n,
+                    backend=_backend_for(use_pallas, backend))
+
+
+# ------------------------------------------------------------ compression
+
+register_impl("sketch", "pallas",
+              lambda u, r, block_n=2048: sketch_apply_pallas(
+                  u, r, block_n=block_n, interpret=not on_tpu()),
+              eligible=_not_interpret)
+_sketch_xla_jit = jax.jit(ref.sketch_ref)
+register_impl("sketch", "xla",
+              lambda u, r, block_n=2048: _sketch_xla_jit(u, r))
+register_impl("sketch", "ref",
+              lambda u, r, block_n=2048: ref.sketch_ref(u, r))
 
 
 def sketch_apply(updates: jax.Array, sketch: jax.Array, *,
                  use_pallas: Optional[bool] = None,
-                 block_n: int = 2048) -> jax.Array:
-    """Stacked sketch-apply ``U Rᵀ``.  updates (K, n), sketch (m, n).
+                 block_n: int = 2048,
+                 backend: Optional[str] = None) -> jax.Array:
+    """Stacked sketch-apply ``U Rᵀ`` against an explicit sketch matrix.
+    updates (K, n), sketch (m, n).  For the counter-based sign sketch that
+    never materializes R, use :func:`sign_sketch`."""
+    return dispatch("sketch", updates, sketch, block_n=block_n,
+                    backend=_backend_for(use_pallas, backend))
 
-    Unlike the older wrappers above, ``use_pallas=None`` runs the jnp
-    reference off-TPU (this sits on the per-round compression hot path, so
-    interpret-mode validation is opt-in via ``use_pallas=True``)."""
-    use_pallas = on_tpu() if use_pallas is None else use_pallas
-    if use_pallas:
-        return sketch_apply_pallas(updates, sketch, block_n=block_n,
-                                   interpret=not on_tpu())
-    return ref.sketch_ref(updates, sketch)
+
+register_impl("topk", "pallas",
+              lambda v, k, block_n=2048: topk_select_pallas(
+                  v, k, block_n=block_n, interpret=not on_tpu()),
+              supports=lambda v, k, block_n=2048: k <= block_n,
+              eligible=_not_interpret)
+_topk_xla_jit = jax.jit(ref.topk_ref, static_argnums=1)
+register_impl("topk", "xla",
+              lambda v, k, block_n=2048: _topk_xla_jit(v, k))
+register_impl("topk", "ref",
+              lambda v, k, block_n=2048: ref.topk_ref(v, k))
 
 
 def topk_select(vec: jax.Array, k: int, *,
                 use_pallas: Optional[bool] = None,
-                block_n: int = 2048) -> Tuple[jax.Array, jax.Array]:
-    """k largest-|v| entries as (values, indices i32); same dispatch default
-    as :func:`sketch_apply` (reference off-TPU, compiled kernel on TPU).
-    Falls back to the reference when k exceeds the per-chunk candidate
-    budget ``block_n``."""
-    use_pallas = on_tpu() if use_pallas is None else use_pallas
-    if use_pallas and k <= block_n:
-        return topk_select_pallas(vec, k, block_n=block_n,
-                                  interpret=not on_tpu())
-    return ref.topk_ref(vec, k)
+                block_n: int = 2048,
+                backend: Optional[str] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """k largest-|v| entries as (values, indices i32).
+
+    ``use_pallas=True`` keeps the PR-3 semantics: it silently falls back to
+    the autotuned path when k exceeds the kernel's per-chunk candidate
+    budget ``block_n`` (the op's ``supports`` constraint — forced backends
+    via ``force_backend``/env fall back the same way).  An explicit
+    ``backend="pallas"`` is a hard requirement and raises instead."""
+    be = _backend_for(use_pallas, backend)
+    if backend is None and be == "pallas" and k > block_n:
+        be = None                     # legacy silent fallback (tested)
+    return dispatch("topk", vec, k, block_n=block_n, backend=be)
+
+
+# ----------------------------------------------------------- combine / rng
+
+register_impl("combine", "pallas",
+              lambda w, u, a, block_n=2048: combine_pallas(
+                  w, u, a, block_n=block_n, interpret=not on_tpu()),
+              eligible=_not_interpret)
+_combine_xla_jit = jax.jit(ref.combine_ref)
+register_impl("combine", "xla",
+              lambda w, u, a, block_n=2048: _combine_xla_jit(w, u, a))
+register_impl("combine", "ref",
+              lambda w, u, a, block_n=2048: ref.combine_ref(w, u, a))
 
 
 def weighted_combine(params_vec: jax.Array, updates: jax.Array,
                      alpha: jax.Array, *, use_pallas: Optional[bool] = None,
-                     block_n: int = 2048) -> jax.Array:
+                     block_n: int = 2048,
+                     backend: Optional[str] = None) -> jax.Array:
     """w + Σ α_k U_k.  params_vec (n,), updates (K, n), alpha (K,)."""
-    use_pallas = on_tpu() if use_pallas is None else use_pallas
-    if use_pallas or not on_tpu():
-        return combine_pallas(params_vec, updates, alpha, block_n=block_n,
-                              interpret=not on_tpu())
-    return ref.combine_ref(params_vec, updates, alpha)
+    return dispatch("combine", params_vec, updates, alpha, block_n=block_n,
+                    backend=_backend_for(use_pallas, backend))
 
+
+# The ref oracle materializes the full m×n R — the very thing this op
+# exists to avoid — so it is NEVER an autotune candidate (it could win a
+# micro-timing at toy shapes and OOM at production ones); reach it only via
+# backend="ref" / force_backend, as tests do.
+_never = (lambda: False)
+register_impl("sign_sketch", "pallas",
+              lambda u, seed, m, block_n=2048: rng_sketch_pallas(
+                  u, seed, m=m, block_n=block_n, interpret=not on_tpu()),
+              eligible=_not_interpret)
+register_impl("sign_sketch", "xla",
+              lambda u, seed, m, block_n=4096: rng_sketch_xla(
+                  u, seed, m=m, block_n=block_n))
+register_impl("sign_sketch", "ref",
+              lambda u, seed, m, block_n=4096: ref.rng_sketch_ref(
+                  u, seed, m=m),
+              eligible=_never)
+
+
+def sign_sketch(updates: jax.Array, seed, m: int, *,
+                use_pallas: Optional[bool] = None, block_n: int = 4096,
+                backend: Optional[str] = None) -> jax.Array:
+    """Counter-based sign sketch ``U Rᵀ/√m`` (K, n) → (K, m): the Rademacher
+    matrix is generated on the fly from (row, col, seed) counters and never
+    materialized (see :mod:`repro.kernels.rng_sketch`).  ``seed`` is a
+    uint32 scalar (array or int)."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    return dispatch("sign_sketch", updates, seed, m, block_n=block_n,
+                    backend=_backend_for(use_pallas, backend))
+
+
+register_impl("sign_sketch_adjoint", "xla",
+              lambda s, seed, n, block_n=4096: rng_sketch_adjoint_xla(
+                  s, seed, n=n, block_n=block_n))
+register_impl("sign_sketch_adjoint", "ref",
+              lambda s, seed, n, block_n=4096: ref.rng_sketch_adjoint_ref(
+                  s, seed, n=n),
+              eligible=_never)
+
+
+def sign_sketch_adjoint(coords: jax.Array, seed, n: int, *,
+                        block_n: int = 4096,
+                        backend: Optional[str] = None) -> jax.Array:
+    """Decode-side adjoint ``Rᵀ s/√m`` (m,) → (n,), same implicit R."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    return dispatch("sign_sketch_adjoint", coords, seed, n,
+                    block_n=block_n, backend=backend)
+
+
+# ------------------------------------------------------------ decode attn
 
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  lengths: jax.Array, *, window: Optional[int] = None,
                  block_s: int = 512, use_pallas: Optional[bool] = None
                  ) -> Tuple[jax.Array, jax.Array]:
-    """Single-token attention vs a long cache; returns (o, lse) partials."""
+    """Single-token attention vs a long cache; returns (o, lse) partials.
+    (Serving-path op — not part of the aggregation registry.)"""
     use_pallas = on_tpu() if use_pallas is None else use_pallas
     if use_pallas:
         return flash_decode_pallas(q, k, v, lengths, block_s=block_s,

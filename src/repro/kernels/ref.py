@@ -65,6 +65,26 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return o, lse
 
 
+def rng_sketch_ref(updates: jax.Array, seed, *, m: int,
+                   block_n: int = 4096) -> jax.Array:
+    """Materialized-R oracle for kernels.rng_sketch: builds the full sign
+    matrix from the same counter-based hash, then one matmul."""
+    from .rng_sketch import rng_sign_matrix
+    del block_n                       # the oracle needs no tiling
+    R = rng_sign_matrix(seed, m, updates.shape[1])
+    return (updates.astype(jnp.float32) @ R.T) / jnp.sqrt(jnp.float32(m))
+
+
+def rng_sketch_adjoint_ref(coords: jax.Array, seed, *, n: int,
+                           block_n: int = 4096) -> jax.Array:
+    """Materialized-R oracle for the decode-side adjoint ``Rᵀ s/√m``."""
+    from .rng_sketch import rng_sign_matrix
+    del block_n
+    R = rng_sign_matrix(seed, coords.shape[0], n)
+    return (R.T @ coords.astype(jnp.float32)) / jnp.sqrt(
+        jnp.float32(coords.shape[0]))
+
+
 def lse_merge_ref(o_parts: jax.Array, lse_parts: jax.Array):
     """Merge per-shard flash-decode partials.
 

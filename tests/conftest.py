@@ -1,8 +1,34 @@
 import os
 import sys
 
+import pytest
+
 # Tests run on the single real CPU device (the 512-device override is
 # reserved for launch/dryrun.py). Keep compile caches warm across tests.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def tiny_edge_problem():
+    """Shared 12-device logreg problem for the hier/compress e2e tests:
+    one dataset + model init per SESSION, so every module reuses the same
+    shapes and — via the process-wide compile caches in ``repro.fl`` and
+    ``repro.hier.fused`` — the same compiled client-update and tier-stage
+    functions.  Returns (dataset, params, n_model)."""
+    import jax
+    import numpy as np
+    from repro.data import make_synthetic
+    from repro.data.federated import FederatedDataset
+    from repro.models import get_model
+    from repro.models.config import ArchConfig
+
+    dim, n_dev = 20, 12
+    xs, ys = make_synthetic(1.0, 1.0, num_devices=n_dev,
+                            samples_per_device=30, dim=dim, seed=5)
+    ds = FederatedDataset(xs, ys, np.ones(ys.shape, np.float32),
+                          xs.reshape(-1, dim)[:150], ys.reshape(-1)[:150], 10)
+    model = get_model(ArchConfig(name="lr", family="logreg", input_dim=dim,
+                                 num_classes=10))
+    return ds, model.init(jax.random.PRNGKey(0)), dim * 10 + 10

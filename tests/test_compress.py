@@ -15,7 +15,6 @@ from repro.compress import (CompressConfig, ErrorFeedback,
                             payload_gram)
 from repro.core import SolveConfig, available_aggregators, solve_alpha
 from repro.core.gram import gram_and_cross
-from repro.data.federated import FederatedDataset
 from repro.edge import uniform_fleet
 from repro.fl import run_hier_simulation
 from repro.hier import (HierConfig, compressed_summary_bytes, star_topology,
@@ -321,18 +320,10 @@ def test_hier_sketch_config_and_registry():
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
-def tiny_problem():
-    from repro.data import make_synthetic
-    from repro.models import get_model
-    from repro.models.config import ArchConfig
-    dim, n_dev = 20, 12
-    xs, ys = make_synthetic(1.0, 1.0, num_devices=n_dev, samples_per_device=30,
-                            dim=dim, seed=5)
-    ds = FederatedDataset(xs, ys, np.ones(ys.shape, np.float32),
-                          xs.reshape(-1, dim)[:150], ys.reshape(-1)[:150], 10)
-    model = get_model(ArchConfig(name="lr", family="logreg", input_dim=dim,
-                                 num_classes=10))
-    return ds, model.init(jax.random.PRNGKey(0)), 20 * 10 + 10
+def tiny_problem(tiny_edge_problem):
+    # shared session-scoped dataset/model (conftest) → one set of compiled
+    # functions serves both this module and test_hier
+    return tiny_edge_problem
 
 
 def _hier(ds, params, topo, rounds=5, **kw):

@@ -1,5 +1,10 @@
 """SPMD integration tests — run in a SUBPROCESS with 8 forced host devices
-(the main test process must keep the default single device)."""
+(the main test process must keep the default single device).
+
+Marked ``slow``: each subprocess compiles a full sharded train step on an
+emulated pod mesh (~8 min apiece on this CPU container — they dominated the
+old ~26-min tier-1 wall-clock).  The default run skips them; CI's full
+-coverage leg (and any local ``pytest -m ""``) still runs everything."""
 import json
 import os
 import subprocess
@@ -7,6 +12,8 @@ import sys
 import textwrap
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

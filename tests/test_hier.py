@@ -12,7 +12,6 @@ from repro.core import (SolveConfig, available_aggregators,
                         gram_and_cross_chunked, gram_block,
                         gram_block_chunked, merge_gram_blocks, solve_alpha)
 from repro.core.flatten import tree_to_vector
-from repro.data.federated import FederatedDataset
 from repro.edge import bimodal_fleet, uniform_fleet
 from repro.fl import run_hier_simulation
 from repro.hier import (HierConfig, Link, get_topology,
@@ -21,8 +20,6 @@ from repro.hier import (HierConfig, Link, get_topology,
                         two_tier_topology, update_bytes)
 from repro.kernels import ops
 from repro.kernels.gram import gram_block_pallas
-from repro.models import get_model
-from repro.models.config import ArchConfig
 from repro.models.logistic import logistic_apply, logistic_loss
 
 import repro.hier.hier_server  # noqa: F401  (registers hier aggregators)
@@ -92,9 +89,13 @@ def test_gram_block_pallas_matches_ref_and_ops_dispatch():
     np.testing.assert_allclose(np.asarray(Gp), np.asarray(ua @ ub.T),
                                atol=1e-4)
     np.testing.assert_allclose(np.asarray(cp), np.asarray(ua @ g), atol=1e-4)
+    # default dispatch now routes through the registry (compiled XLA off-TPU,
+    # not interpret-mode Pallas) — equal up to f32 accumulation order
     Gd, cd = ops.gram_block_and_cross(ua, ub, g, block_n=128)
-    np.testing.assert_allclose(np.asarray(Gd), np.asarray(Gp), atol=1e-5)
-    np.testing.assert_allclose(np.asarray(cd), np.asarray(cp), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Gd), np.asarray(Gp), rtol=1e-5,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cd), np.asarray(cp), rtol=1e-5,
+                               atol=1e-4)
 
 
 def test_merge_gram_blocks_validates_segment_count():
@@ -268,16 +269,11 @@ def test_hier_config_validation():
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
-def tiny_problem():
-    from repro.data import make_synthetic
-    dim, n_dev = 20, 12
-    xs, ys = make_synthetic(1.0, 1.0, num_devices=n_dev, samples_per_device=30,
-                            dim=dim, seed=5)
-    ds = FederatedDataset(xs, ys, np.ones(ys.shape, np.float32),
-                          xs.reshape(-1, dim)[:150], ys.reshape(-1)[:150], 10)
-    model = get_model(ArchConfig(name="lr", family="logreg", input_dim=dim,
-                                 num_classes=10))
-    return ds, model.init(jax.random.PRNGKey(0))
+def tiny_problem(tiny_edge_problem):
+    # shared session-scoped dataset/model (conftest) → one set of compiled
+    # functions serves both this module and test_compress
+    ds, params, _ = tiny_edge_problem
+    return ds, params
 
 
 def _hier(ds, params, topo, seed=11, rounds=5, **kw):
@@ -301,6 +297,12 @@ def test_hier_simulation_runs_and_is_deterministic(tiny_problem):
     assert np.isfinite(r1.train_loss).all()
     assert all(b >= a for a, b in zip(r1.times, r1.times[1:]))
     assert r1.arrived + r1.dropped == r1.dispatched - 0  # all rounds drained
+    # fused-engine wall-clock stats ride the result (satellite: compile vs
+    # steady-state split for bench sweeps)
+    assert set(r1.engine) >= {"compile_wall_time_s",
+                              "steady_wall_time_per_round_s",
+                              "rounds_wall_time_s"}
+    assert r1.engine["rounds_wall_time_s"] > 0
 
 
 def test_hier_simulation_learns_and_saves_uplink(tiny_problem):
