@@ -10,7 +10,8 @@ resulting α to the full update.
 from __future__ import annotations
 
 import re
-from typing import Any, Callable, Iterable, Sequence
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +105,106 @@ def scope_vector(tree: Pytree, scope: str | Sequence[str] | None,
     return tree_to_vector(select_scope(tree, scope), dtype=dtype)
 
 
+@dataclass(frozen=True)
+class LeafSlab:
+    """One pytree leaf as a column slab of the flat ``(K, n)`` row-major
+    view: ``matrix`` is ``leaf.reshape(K, -1)`` (a cheap view for contiguous
+    leaves, never a cross-leaf concatenation), occupying flat columns
+    ``[offset, offset + width)`` in ``tree_to_vector`` order."""
+    index: int            # leaf position in tree_leaves order
+    offset: int           # first flat column
+    width: int            # columns (= leaf.size / K)
+    in_scope: bool        # participates in the Gram scope
+    matrix: jax.Array     # (K, width) view of the stacked leaf
+
+
+class ChunkedFlatView:
+    """Leaf-aligned column-chunk view of a *stacked* pytree (leading K axis
+    per leaf) — the streaming alternative to the full ``jnp.concatenate``
+    copy in ``core.aggregation._stacked_to_matrix``.
+
+    The flat column order matches :func:`tree_to_vector` exactly (leaf
+    order, row-major ravel per leaf), so a consumer that sweeps the slabs
+    (or :meth:`chunks`) left to right sees the same (K, n) matrix the dense
+    path materializes — without ever holding more than one chunk.  Scope is
+    *leaf-granular* by construction (``select_scope`` keeps or drops whole
+    leaves), so scoped reductions simply skip ``in_scope=False`` slabs
+    instead of gathering columns.
+    """
+
+    def __init__(self, stacked: Pytree, scope: str | Sequence[str] | None = None):
+        leaves = jax.tree_util.tree_leaves(stacked)
+        if not leaves:
+            raise ValueError("cannot build a flat view of an empty pytree")
+        self.K = int(leaves[0].shape[0])
+        bad = [tuple(l.shape) for l in leaves
+               if l.ndim < 1 or l.shape[0] != self.K]
+        if bad:
+            raise ValueError(f"stacked pytree leaves must share the leading "
+                             f"K={self.K} axis; offending shapes: {bad}")
+        kept = [l.size > 0 for l in
+                jax.tree_util.tree_leaves(select_scope(stacked, scope))]
+        self.slabs: List[LeafSlab] = []
+        offset = 0
+        for i, (leaf, keep) in enumerate(zip(leaves, kept)):
+            width = leaf.size // self.K
+            self.slabs.append(LeafSlab(
+                index=i, offset=offset, width=width, in_scope=bool(keep),
+                matrix=jnp.reshape(leaf, (self.K, width))))
+            offset += width
+        self.n = offset
+
+    @property
+    def scoped_slabs(self) -> List[LeafSlab]:
+        return [s for s in self.slabs if s.in_scope]
+
+    @property
+    def n_scoped(self) -> int:
+        return sum(s.width for s in self.scoped_slabs)
+
+    def chunks(self, chunk_cols: int, scoped_only: bool = False):
+        """Yield ``(offset, in_scope, (K, w) matrix)`` column chunks with
+        ``w <= chunk_cols``, never crossing a leaf boundary (leaf-aligned:
+        a leaf wider than ``chunk_cols`` is split, narrower leaves come out
+        whole).  Offsets are flat columns of the full view."""
+        if chunk_cols < 1:
+            raise ValueError(f"chunk_cols must be >= 1, got {chunk_cols}")
+        for slab in self.slabs:
+            if scoped_only and not slab.in_scope:
+                continue
+            for start in range(0, slab.width, chunk_cols):
+                w = min(chunk_cols, slab.width - start)
+                yield (slab.offset + start, slab.in_scope,
+                       jax.lax.dynamic_slice(slab.matrix, (0, start),
+                                             (self.K, w)))
+
+    def materialize(self, dtype: jnp.dtype | None = jnp.float32) -> jax.Array:
+        """Dense (K, n) matrix — tests / small models only; the streaming
+        consumers exist so production never calls this at transformer width."""
+        parts = [s.matrix.astype(dtype) if dtype is not None else s.matrix
+                 for s in self.slabs]
+        return jnp.concatenate(parts, axis=1)
+
+
+def mix_rows(weights: jax.Array, leaf: jax.Array) -> jax.Array:
+    """``Σ_k w_k · leaf[k]`` flattened to the leaf's (width,) columns, with
+    f32 accumulation and **no** materialized f32 upcast of the leaf — the
+    per-leaf primitive of the streamed combine pass (``α @ U`` one leaf at a
+    time).
+
+    The weights are cast to the leaf dtype so the contraction never copies
+    the leaf: for bf16 update leaves that rounds each f32 solve weight to 8
+    mantissa bits, a deliberate trade — second-order next to the bf16
+    quantization already baked into the update values themselves (f32
+    leaves contract exactly; the fused/streamed parity tests pin that
+    case)."""
+    m = jnp.reshape(leaf, (leaf.shape[0], -1))
+    out = jax.lax.dot_general(
+        weights.astype(m.dtype)[None, :], m, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return out[0]
+
+
 def tree_add(a: Pytree, b: Pytree) -> Pytree:
     return jax.tree_util.tree_map(jnp.add, a, b)
 
@@ -129,8 +230,10 @@ def tree_weighted_sum(trees: Iterable[Pytree], weights: jax.Array) -> Pytree:
 
 def stacked_weighted_sum(stacked: Pytree, weights: jax.Array) -> Pytree:
     """Same as :func:`tree_weighted_sum` but for pre-stacked pytrees whose
-    leaves have a leading K axis."""
+    leaves have a leading K axis.  Contracts via :func:`mix_rows` (a dot
+    with f32 accumulation) instead of broadcasting ``leaf * w`` — no
+    K-times-leaf temporary, which matters at transformer width."""
     def comb(leaf):
-        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
-        return jnp.sum(leaf * w, axis=0)
+        return jnp.reshape(mix_rows(weights, leaf),
+                           leaf.shape[1:]).astype(leaf.dtype)
     return jax.tree_util.tree_map(comb, stacked)

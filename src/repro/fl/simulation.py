@@ -30,6 +30,7 @@ the decodes, and the cloud's γ stage runs on sketched cross-terms.
 """
 from __future__ import annotations
 
+import os
 import time
 from collections import deque
 from dataclasses import dataclass, field, replace as dc_replace
@@ -305,10 +306,12 @@ class HierSimulationResult:
     dropped: int = 0            # these match AsyncSimulationResult semantics)
     rounds_skipped: int = 0     # rounds where every participant dropped out
     wall_time: float = 0.0
-    # real-wall-clock engine stats (satellite: compile vs steady-state):
+    # engine stats: engine_name ("fused"|"streamed"), the memory model
+    # (round_matrix_peak_bytes for the engine used vs what the dense (P, n)
+    # matrices would cost, dense_round_matrix_bytes), and real wall-clock —
     # compile_wall_time_s (first round, pays the jit compiles),
     # steady_wall_time_per_round_s (median of the rest), rounds_wall_time_s
-    engine: Dict[str, float] = field(default_factory=dict)
+    engine: Dict[str, Any] = field(default_factory=dict)
 
     def time_to_accuracy(self, level: float) -> Optional[float]:
         return self.to_curve().time_to_accuracy(level)
@@ -324,7 +327,10 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                         init_params: Pytree, dataset: FederatedDataset,
                         cfg, topology, num_rounds: int,
                         selection_seed: int = 1234, eval_every: int = 1,
-                        collect_gamma: bool = False) -> HierSimulationResult:
+                        collect_gamma: bool = False,
+                        engine: str = "auto",
+                        stream_chunk: Optional[int] = None,
+                        mesh=None) -> HierSimulationResult:
     """Synchronous rounds over a multi-tier topology (``cfg`` is a
     :class:`repro.hier.HierConfig`, ``topology`` a :class:`repro.hier.Topology`).
 
@@ -339,6 +345,14 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     ``hier_contextual_sketch``).  With ``cfg.compress`` set, summary uplinks
     carry EF-compressed payloads and the γ stage solves on sketched
     cross-terms (see the module docstring and ``repro.compress``).
+
+    ``engine`` picks the round engine: ``"fused"`` (dense (P, n) round
+    matrices, fastest at small width), ``"streamed"`` (chunked column
+    passes, O(P·chunk) round-matrix memory — big models), or ``"auto"``
+    (default): streamed when the dense footprint 2·P·n·4 bytes would exceed
+    ``REPRO_DENSE_ROUND_BYTES`` (default 1 GiB).  Device-uplink compression
+    needs the dense matrices and forces the fused engine.  ``stream_chunk``
+    / ``mesh`` are forwarded to the streamed engine.
     """
     # Imported lazily: repro.hier imports repro.edge which imports repro.fl,
     # so the reverse edge must not exist at import time.
@@ -347,10 +361,10 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     from ..edge.wallclock import model_flops_per_step, model_payload_bytes
     from ..hier.comm import (CommLedger, compressed_summary_bytes,
                              summary_bytes, update_bytes)
-    from ..hier.fused import (HierRoundEngine, apply_delta, flatten_stacked,
-                              gather_mean)
+    from ..hier.fused import HierRoundEngine
     from ..hier.gateway import CompressedSummary, GatewaySummary
     from ..hier.hier_server import blockdiag_diagnostics
+    from ..hier.streamed import StreamedRoundEngine, dense_round_bytes
 
     fleet = topology.fleet
     if dataset.num_devices < fleet.num_devices:
@@ -382,11 +396,41 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     solve_cfg = cfg.solve_config()
     relay = cfg.aggregator == "hier_relay"
     tier_mode = cfg.tier_mode
-    # The fused round engine (repro.hier.fused): summaries carry FLAT f32
-    # vectors for ū/ĝ and every tier stage is one shape-keyed jit call;
-    # only the final cloud delta converts back to the parameter tree.
-    engine = HierRoundEngine(params, solve_cfg, tier_mode, cfg.gram_scope)
     cloud_kind = "fedavg" if cfg.aggregator == "hier_fedavg" else "combo"
+
+    # -- round-engine selection (the per-round P is fixed by topology+fan_in)
+    P_round = sum(min(cfg.fan_in, len(gw.children)) if cfg.fan_in is not None
+                  else len(gw.children) for gw in gateways)
+    dense_bytes = dense_round_bytes(P_round, n_model)
+    if engine not in ("auto", "fused", "streamed"):
+        raise ValueError(f"unknown engine '{engine}' (auto|fused|streamed)")
+    device_decodes = cfg.compressing and cfg.compress.device_uplink
+    if engine == "streamed" and device_decodes:
+        # decoded device rows replace rows of the dense matrices; the
+        # streamed statistics cannot absorb per-row substitutions — an
+        # explicit request must fail loudly, not silently allocate (P, n)
+        raise ValueError("engine='streamed' is incompatible with "
+                         "CompressConfig(device_uplink=True): decoded "
+                         "device rows need the dense round matrices "
+                         "(use engine='fused' or 'auto')")
+    if engine == "auto":
+        budget = float(os.environ.get("REPRO_DENSE_ROUND_BYTES", 1 << 30))
+        engine = ("fused" if device_decodes or dense_bytes <= budget
+                  else "streamed")
+    if engine == "streamed":
+        eng = StreamedRoundEngine(params, solve_cfg, tier_mode,
+                                  cfg.gram_scope, chunk=stream_chunk,
+                                  mesh=mesh, donate_params=True)
+        # the streamed combine donates its params argument off-CPU, and
+        # jnp.asarray above is a no-copy identity on jax arrays: copy once
+        # so round 1 never invalidates the caller's init_params buffers
+        if jax.default_backend() != "cpu":
+            params = jax.tree_util.tree_map(jnp.array, params)
+    else:
+        # dense engine: summaries carry FLAT f32 vectors for ū/ĝ and every
+        # tier stage is one shape-keyed jit call; only the final cloud
+        # delta converts back to the parameter tree
+        eng = HierRoundEngine(params, solve_cfg, tier_mode, cfg.gram_scope)
 
     # Summary compression (repro.compress): every compressing sender keeps
     # per-sender error-feedback residuals that persist ACROSS rounds, and
@@ -447,25 +491,12 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             base_key, jnp.arange(t * P, (t + 1) * P, dtype=jnp.uint32))
         deltas, grads = batch_update(params, x[sel], y[sel], mask[sel],
                                      jnp.asarray(num_steps), keys)
-        # the fused hot path: the round's updates/gradients as (P, n) f32
-        # matrices — cohort slicing below is a single gather per tier node
-        D = flatten_stacked(deltas)
-        GM = flatten_stacked(grads)
-        # participant index -> decoded device (update, gradient) vectors —
-        # device-uplink compression only; everything downstream uses what
-        # arrived, so the ledger prices exactly what the solves consume
-        dev_decoded: Dict[int, jax.Array] = {}
-        dev_decoded_g: Dict[int, jax.Array] = {}
-
-        def member_matrices(idxs):
-            """(U, GR) rows for a cohort — only used on the decode-aware
-            slow path (device-uplink compression replaced some rows); the
-            common path gathers inside the jitted stages instead."""
-            U = jnp.stack([dev_decoded.get(int(i), D[int(i)])
-                           for i in idxs])
-            GR = jnp.stack([dev_decoded_g.get(int(i), GM[int(i)])
-                            for i in idxs])
-            return U, GR
+        # the round context is the engine's view of the cohort: the fused
+        # engine flattens to (P, n) f32 matrices (cohort slicing is a single
+        # in-jit gather per tier node), the streamed engine runs one chunked
+        # column pass and keeps only (P, P) statistics — summaries then
+        # carry symbolic row-mix refs instead of full-width vectors
+        ctx = eng.begin_round(deltas, grads)
 
         # -- event loop: device terminals, then multi-hop transfers ---------
         # Contextual tiers run a gradient pre-pass: each gateway ships its
@@ -536,7 +567,7 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                 send_up("summary", node, list(idxs),
                         len(idxs) * update_bytes(n_model))
             elif use_prepass:
-                ghat_g = gather_mean(GM, jnp.asarray(idxs))
+                ghat_g = ctx.mean_grad(idxs)
                 send_up("grad", node, (ghat_g, len(idxs)),
                         update_bytes(n_model))
             else:   # no pre-pass: solve (or average) against the cohort's
@@ -556,16 +587,8 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             pool_scale = ((pool - 1) / max(len(idxs) - 1, 1)
                           if cfg.fan_in is not None and cfg.fan_in < pool
                           and tier_mode == "contextual" else 1.0)
-            ones = jnp.ones((len(idxs),), jnp.float32)
-            if dev_decoded:
-                U, GR = member_matrices(idxs)
-                stage = engine.tier(len(idxs), pool_scale=pool_scale)
-                out = stage(U, GR, ones, solve_grad)
-            else:
-                stage = engine.tier(len(idxs), pool_scale=pool_scale,
-                                    gather=True)
-                out = stage(D, GM, jnp.asarray(np.asarray(idxs, np.int64)),
-                            ones, solve_grad)
+            out = ctx.gateway(idxs, solve_grad=solve_grad,
+                              pool_scale=pool_scale)
             return GatewaySummary(
                 node_id=gid, num_updates=len(idxs),
                 member_ids=np.asarray([participants[i][0] for i in idxs],
@@ -575,13 +598,14 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
 
         def _merge_summaries(nid, kids, solve_grad):
             """Parent-tier merge over what actually arrived: the children's
-            ū vectors become this node's members (mass-conserving Σγ=1
-            stage, see ``hier.gateway.merge_summaries``)."""
+            ū refs become this node's members (mass-conserving Σγ=1 stage,
+            see ``hier.gateway.merge_summaries``); member vectors stack
+            inside the jit boundary (fused) or stay symbolic row-mixes
+            (streamed)."""
             counts = np.asarray([s.num_updates for s in kids], np.float32)
-            stage = engine.tier(len(kids), sum_to=1.0)
-            out = stage(jnp.stack([s.u_bar for s in kids]),
-                        jnp.stack([s.grad_est for s in kids]),
-                        jnp.asarray(counts), solve_grad)
+            out = ctx.merge([s.u_bar for s in kids],
+                            [s.grad_est for s in kids], counts,
+                            solve_grad=solve_grad)
             return GatewaySummary(
                 node_id=nid, num_updates=int(counts.sum()),
                 member_ids=np.asarray([s.node_id for s in kids], np.int64),
@@ -592,28 +616,27 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             """EF-compress one summary's (ū, ĝ) for its uplink hop; returns
             (payload, wire bytes).  The same per-round sketch seed is shared
             by every node and both vectors, so sketched cross-terms compose
-            at the cloud; residual state is per (vector, node)."""
-            comp_u, u_hat = ef.step(("u", nid), s.u_bar, comp_u_c, seed=t)
-            comp_g, g_hat = ef.step(("g", nid), s.grad_est, comp_g_c, seed=t)
+            at the cloud; residual state is per (vector, node).  Under the
+            streamed engine this is where symbolic refs dense-ify: one
+            chunked combine per vector, right before the encode."""
+            comp_u, u_hat = ef.step(("u", nid), ctx.materialize(s.u_bar),
+                                    comp_u_c, seed=t)
+            comp_g, g_hat = ef.step(("g", nid), ctx.materialize(s.grad_est),
+                                    comp_g_c, seed=t)
             decoded = dc_replace(s, u_bar=u_hat, grad_est=g_hat)
             nbytes = compressed_summary_bytes(comp_u.nbytes + comp_g.nbytes)
             return CompressedSummary(decoded, comp_u, comp_g), nbytes
 
-        def _weighted_mean_vecs(vecs, counts):
-            w = np.asarray(counts, np.float64)
-            w = w / max(float(w.sum()), 1e-12)
-            return jnp.asarray(w, jnp.float32) @ jnp.stack(vecs)
-
         def on_grad_complete(nid):
             nonlocal ghat_global
             node = topology.nodes[nid]
-            entries = recv_grad[nid]         # [(sender, ĝ vector, count)]
+            entries = recv_grad[nid]         # [(sender, ĝ ref, count)]
             if not entries:
                 if node.parent is not None:
                     gone_up(nid, out_grad, on_grad_complete)
                 return
             counts = np.asarray([c for _, _, c in entries], np.float64)
-            ghat = _weighted_mean_vecs([g for _, g, _ in entries], counts)
+            ghat = ctx.compose_grads([g for _, g, _ in entries], counts)
             if node.parent is None:          # cloud: broadcast the global ĝ
                 ghat_global = ghat
                 for sender, _, _ in entries:
@@ -667,7 +690,7 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                 result.rounds_skipped += 1
             else:
                 delta, round_info = _cloud_stage(payload)
-                params = apply_delta(params, delta)
+                params = ctx.apply(params, delta)
             cloud_done = True
 
         def _cloud_stage(payload):
@@ -681,17 +704,7 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                          and not relay and tier_mode == "contextual" else 1.0)
                 kind = ("fedavg" if cfg.aggregator == "hier_fedavg"
                         else "raw")
-                ones = jnp.ones((len(payload),), jnp.float32)
-                if dev_decoded:
-                    U, GR = member_matrices(payload)
-                    stage = engine.cloud(len(payload), kind,
-                                         solve_scale=scale)
-                    return stage(U, jnp.mean(GR, axis=0), ones)
-                stage = engine.cloud(len(payload), kind, solve_scale=scale,
-                                     gather=True)
-                return stage(D, GM,
-                             jnp.asarray(np.asarray(payload, np.int64)),
-                             ones)
+                return ctx.cloud_raw(payload, kind, solve_scale=scale)
             if compressing:                      # compressed child summaries
                 csums = payload
                 summaries = [p.summary for p in csums]
@@ -703,22 +716,19 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                                     [p.comp_u for p in csums],
                                     [p.comp_g for p in csums],
                                     np.asarray(counts, np.float64))
-                ghat = _weighted_mean_vecs([s.grad_est for s in summaries],
-                                           counts)
+                ghat = ctx.compose_grads([s.grad_est for s in summaries],
+                                         counts)
                 # no blockdiag diagnostics: the K_g² Gram blocks stayed at
                 # the gateways — that is where the byte saving comes from
-                stage = engine.cloud(len(summaries), "combo")
-                return stage(jnp.stack([s.u_bar for s in summaries]), ghat,
-                             jnp.asarray(counts, jnp.float32),
-                             override=G2c2)
+                return ctx.cloud_combo([s.u_bar for s in summaries], counts,
+                                       ghat, kind="combo", override=G2c2)
             summaries = payload              # top-tier child summaries
             counts = [s.num_updates for s in summaries]
             ghat = (ghat_global if ghat_global is not None else
-                    _weighted_mean_vecs([s.grad_est for s in summaries],
-                                        counts))
-            stage = engine.cloud(len(summaries), cloud_kind)
-            delta, info = stage(jnp.stack([s.u_bar for s in summaries]),
-                                ghat, jnp.asarray(counts, jnp.float32))
+                    ctx.compose_grads([s.grad_est for s in summaries],
+                                      counts))
+            delta, info = ctx.cloud_combo([s.u_bar for s in summaries],
+                                          counts, ghat, kind=cloud_kind)
             info = dict(info)
             info.update(blockdiag_diagnostics(summaries, info["gamma"],
                                               cfg.smoothness))
@@ -758,15 +768,18 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                         # round a device DID report persists on-device.
                         # BOTH streams compress — the solves downstream
                         # consume the gradient too, so an upload that only
-                        # shipped the update would be under-priced.
+                        # shipped the update would be under-priced.  The
+                        # decoded rows enter the round context as ONE
+                        # gathered array update per cohort (fused engine;
+                        # the streamed engine defers to it for this config).
                         i = idx_of[evt.device_id]
                         comp_d, vhat = ef.step(
-                            ("dev", evt.device_id), D[i], comp_u_c, seed=t)
-                        comp_dg, ghat = ef.step(
-                            ("devg", evt.device_id), GM[i], comp_g_c,
+                            ("dev", evt.device_id), ctx.D[i], comp_u_c,
                             seed=t)
-                        dev_decoded[i] = vhat
-                        dev_decoded_g[i] = ghat
+                        comp_dg, ghat = ef.step(
+                            ("devg", evt.device_id), ctx.GM[i], comp_g_c,
+                            seed=t)
+                        ctx.add_decoded_row(i, vhat, ghat)
                         ledger.record_up(topology.nodes[gid].tier,
                                          comp_d.nbytes + comp_dg.nbytes)
                     else:
@@ -795,11 +808,27 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     result.comm = ledger.report()
     result.cloud_uplink_bytes = ledger.cloud_uplink_bytes
     result.total_bytes = ledger.total_bytes()
+    # compressed summary tiers dense-ify above the encode hop: the largest
+    # summary-level fan-in bounds the (members, n) stacks the streamed
+    # engine's fused-fallback stages hold (0 when uncompressed / fused)
+    dense_members = 0
+    if compressing and eng.name == "streamed":
+        dense_members = max((len(nd.children)
+                             for tier in range(2, topology.depth + 1)
+                             for nd in topology.tier_nodes(tier)), default=0)
+    result.engine = {
+        "engine_name": eng.name,
+        # deterministic memory model of the engine actually used vs the
+        # dense (P, n) footprint — THE acceptance metric for big models
+        "round_matrix_peak_bytes": eng.peak_round_bytes(
+            P_round, dense_fallback_members=dense_members),
+        "dense_round_matrix_bytes": dense_bytes,
+    }
     if round_walls:
         steady = round_walls[1:] if len(round_walls) > 1 else round_walls
-        result.engine = {
+        result.engine.update({
             "compile_wall_time_s": round_walls[0],
             "steady_wall_time_per_round_s": float(np.median(steady)),
             "rounds_wall_time_s": float(np.sum(round_walls)),
-        }
+        })
     return result

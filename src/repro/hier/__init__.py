@@ -14,6 +14,12 @@ Submodules:
   * comm        — per-tier byte/latency ledger (the ≥5× cloud-uplink saving
                   the subsystem exists to deliver, and the true serialized
                   sizes of ``repro.compress`` summary payloads)
+  * fused       — dense (P, n) round matrices + shape-keyed jit stages: the
+                  fastest path at small model width
+  * streamed    — big-model twin: chunked column passes accumulate the
+                  (P, P) round statistics, tier solves run in P-space, and
+                  one streamed combine applies the step — peak round-matrix
+                  memory O(P·chunk) instead of O(P·n)
 
 The entry point is :func:`repro.fl.run_hier_simulation`, which drives these
 through the PR-1 event scheduler with multi-hop link events against the same
@@ -27,10 +33,12 @@ from .hier_server import (HierConfig, aggregate_hier_contextual,
                           aggregate_hier_contextual_sketch,
                           aggregate_hier_fedavg, blockdiag_diagnostics,
                           cloud_aggregate)
+from .streamed import RowMix, StreamedRoundEngine, dense_round_bytes
 from .topology import (Link, TopoNode, Topology, geo_partitioned_topology,
                        get_topology, star_topology, two_tier_topology)
 
 __all__ = [
+    "RowMix", "StreamedRoundEngine", "dense_round_bytes",
     "CommLedger", "TierTraffic", "compressed_summary_bytes", "model_size",
     "summary_bytes", "update_bytes",
     "CompressedSummary", "GatewaySummary", "merge_summaries",

@@ -74,7 +74,12 @@ def apply_delta(params: Pytree, delta_vec: jax.Array) -> Pytree:
 
 def scope_indices(template: Pytree, scope: Optional[str]
                   ) -> Optional[np.ndarray]:
-    """Flat-vector column indices selected by ``gram_scope`` (None → full)."""
+    """Flat-vector column indices selected by ``gram_scope`` (None → full).
+
+    int32 on purpose: x64 is disabled in production runs, so int64 indices
+    would pay a silent downcast on every scoped gather — and 2³¹ columns
+    bounds the *scoped* axis only (the streamed engine handles full width
+    without ever building an index array)."""
     if scope is None or scope == "full":
         return None
     leaves = jax.tree_util.tree_leaves(template)
@@ -83,9 +88,22 @@ def scope_indices(template: Pytree, scope: Optional[str]
     idx, offset = [], 0
     for leaf, keep in zip(leaves, kept):
         if keep:
-            idx.append(np.arange(offset, offset + leaf.size, dtype=np.int64))
+            idx.append(np.arange(offset, offset + leaf.size, dtype=np.int32))
         offset += leaf.size
-    return np.concatenate(idx) if idx else np.zeros((0,), np.int64)
+    return np.concatenate(idx) if idx else np.zeros((0,), np.int32)
+
+
+def solve_diagnostics(G: jax.Array, c: jax.Array, alpha: jax.Array,
+                      beta) -> Dict[str, jax.Array]:
+    """The contextual-solve info keys every tier stage reports — ONE
+    definition shared by the fused bodies below and the streamed stages
+    (``repro.hier.streamed``), so fused/streamed info parity cannot drift."""
+    return {
+        "bound": bound_value(G, c, alpha, beta),
+        "theorem1_reduction": theorem1_reduction(G, alpha, beta),
+        "stationarity_residual": jnp.linalg.norm(
+            gram_residual(G, c, alpha, beta)),
+    }
 
 
 # process-wide stage cache: same static key → same compiled callable.  The
@@ -110,7 +128,7 @@ def gather_mean(M: jax.Array, sel: jax.Array) -> jax.Array:
 
 def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
                   pool_scale: float = 1.0, sum_to: Optional[float] = None,
-                  gather: bool = False, scope_key=None,
+                  gather: bool = False, stack: bool = False, scope_key=None,
                   scope_idx=None) -> Callable:
     """Compiled tier stage — the fused equivalent of
     ``gateway.summarize_updates`` (``sum_to=1`` makes it the parent-tier
@@ -120,11 +138,17 @@ def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
     pre-stacked members.  ``gather=True``: ``fn(D (P,n), GM (P,n),
     sel (K,), counts, g?)`` — the cohort rows are gathered *inside* the jit
     boundary (an eager advanced-index on the round matrices costs a full
-    dispatch per tier node; fused it is free)."""
+    dispatch per tier node; fused it is free).  ``stack=True``: ``fn(us
+    (K-tuple of (n,)), grs (K-tuple of (n,)), counts, g?)`` — the member
+    vectors are stacked *inside* the jit boundary, so a tier merge over
+    child summaries costs one dispatch instead of an eager ``jnp.stack``
+    per matrix per node."""
+    if gather and stack:
+        raise ValueError("summary_stage: gather and stack are exclusive")
     ns = n if scope_idx is None else len(scope_idx)
     gram_impl = _gram_impl(K, ns)
     key = ("summary", K, n, solve_cfg, mode, pool_scale, sum_to, gather,
-           scope_key, gram_impl.backend)
+           stack, scope_key, gram_impl.backend)
     fn = _STAGES.get(key)
     if fn is not None:
         return fn
@@ -147,12 +171,7 @@ def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
         G, c = gram_fn(Us, gs)
         if mode == "contextual":
             alpha = solve_alpha(G, c, cfg)
-            info = {
-                "bound": bound_value(G, c, alpha, beta),
-                "theorem1_reduction": theorem1_reduction(G, alpha, beta),
-                "stationarity_residual": jnp.linalg.norm(
-                    gram_residual(G, c, alpha, beta)),
-            }
+            info = solve_diagnostics(G, c, alpha, beta)
         else:                                   # "mean" (hier-FedAvg tier)
             alpha = w
             info = {"bound": bound_value(G, c, alpha, beta)}
@@ -164,6 +183,10 @@ def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
         @jax.jit
         def stage(D, GM, sel, counts, g=None):
             return body(D[sel], GM[sel], counts, g)
+    elif stack:
+        @jax.jit
+        def stage(us, grs, counts, g=None):
+            return body(jnp.stack(us), jnp.stack(grs), counts, g)
     else:
         @jax.jit
         def stage(U, GR, counts, g=None):
@@ -175,7 +198,8 @@ def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
 
 def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
                 solve_scale: float = 1.0, gather: bool = False,
-                scope_key=None, scope_idx=None) -> Callable:
+                stack: bool = False, scope_key=None,
+                scope_idx=None) -> Callable:
     """Compiled final tier: ``fn(U (P,n), ghat (n,), counts, override?) →
     (delta (n,), info)`` — the fused equivalent of
     ``hier_server.cloud_aggregate``.
@@ -186,11 +210,15 @@ def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
     (count-weighted mean).  ``override`` supplies sketched (G₂, c₂) for the
     compressed pipeline.  With ``gather=True`` the signature becomes
     ``fn(D (Pr,n), GM (Pr,n), sel (P,), counts)``: cohort rows are gathered
-    and the ∇f estimate averaged inside the jit boundary."""
+    and the ∇f estimate averaged inside the jit boundary.  With
+    ``stack=True`` it is ``fn(us (P-tuple of (n,)), ghat, counts,
+    override?)`` — child combinations stacked inside the jit boundary."""
+    if gather and stack:
+        raise ValueError("cloud_stage: gather and stack are exclusive")
     ns = n if scope_idx is None else len(scope_idx)
     gram_impl = _gram_impl(P, ns)
-    key = ("cloud", P, n, solve_cfg, kind, solve_scale, gather, scope_key,
-           gram_impl.backend)
+    key = ("cloud", P, n, solve_cfg, kind, solve_scale, gather, stack,
+           scope_key, gram_impl.backend)
     fn = _STAGES.get(key)
     if fn is not None:
         return fn
@@ -216,21 +244,19 @@ def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
             Us, gs = _scoped(U, ghat, idx)
             G, c = gram_fn(Us, gs)
         alpha = solve_alpha(G, c, cfg)
-        info = {
-            "alpha": alpha,
-            "gamma": alpha,
-            "bound": bound_value(G, c, alpha, beta),
-            "theorem1_reduction": theorem1_reduction(G, alpha, beta),
-            "stationarity_residual": jnp.linalg.norm(
-                gram_residual(G, c, alpha, beta)),
-            "gram_diag": jnp.diag(G),
-        }
+        info = {"alpha": alpha, "gamma": alpha,
+                **solve_diagnostics(G, c, alpha, beta),
+                "gram_diag": jnp.diag(G)}
         return alpha @ U, info
 
     if gather:
         @jax.jit
         def stage(D, GM, sel, counts, override=None):
             return body(D[sel], jnp.mean(GM[sel], axis=0), counts, override)
+    elif stack:
+        @jax.jit
+        def stage(us, ghat, counts, override=None):
+            return body(jnp.stack(us), ghat, counts, override)
     else:
         @jax.jit
         def stage(U, ghat, counts, override=None):
@@ -240,10 +266,32 @@ def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
     return stage
 
 
+@jax.jit
+def gather_override(M: jax.Array, sel: jax.Array, pos: jax.Array,
+                    vals) -> jax.Array:
+    """``M[sel]`` with rows ``pos`` replaced by ``vals`` — the decoded-row
+    path (device-uplink compression) as ONE gathered array update: gather,
+    stack and scatter all happen inside the jit boundary instead of a
+    per-row ``D[int(i)]`` dispatch-and-sync loop."""
+    return M[sel].at[pos].set(jnp.stack(vals))
+
+
+@jax.jit
+def weighted_mean_rows(vecs, w: jax.Array) -> jax.Array:
+    """Count-weighted mean of a tuple of (n,) vectors, stacked in-jit.
+    Owns the normalization — pass raw counts."""
+    return (w / jnp.maximum(jnp.sum(w), 1e-12)) @ jnp.stack(vecs)
+
+
 class HierRoundEngine:
     """Per-run façade over the stage cache: resolves the static keys
     (model width, solve config, tier mode, gram scope) once, then hands the
-    runtime one-call compiled stages."""
+    runtime one-call compiled stages.  ``begin_round`` wraps a round's
+    stacked updates as a :class:`FusedRoundContext` — the engine-agnostic
+    API ``run_hier_simulation`` drives (its streamed twin is
+    ``repro.hier.streamed.StreamedRoundEngine``)."""
+
+    name = "fused"
 
     def __init__(self, params_template: Pytree, solve_cfg: SolveConfig,
                  tier_mode: str, gram_scope: Optional[str] = None):
@@ -260,16 +308,129 @@ class HierRoundEngine:
     # -- stage accessors ----------------------------------------------------
 
     def tier(self, K: int, *, pool_scale: float = 1.0,
-             sum_to: Optional[float] = None,
-             gather: bool = False) -> Callable:
+             sum_to: Optional[float] = None, gather: bool = False,
+             stack: bool = False) -> Callable:
         return summary_stage(K, self.n, self.solve_cfg, self.tier_mode,
                              pool_scale=pool_scale, sum_to=sum_to,
-                             gather=gather, scope_key=self._scope_key,
+                             gather=gather, stack=stack,
+                             scope_key=self._scope_key,
                              scope_idx=self._scope_idx)
 
     def cloud(self, P: int, kind: str, *, solve_scale: float = 1.0,
-              gather: bool = False) -> Callable:
+              gather: bool = False, stack: bool = False) -> Callable:
         return cloud_stage(P, self.n, self.solve_cfg, kind,
                            solve_scale=solve_scale, gather=gather,
-                           scope_key=self._scope_key,
+                           stack=stack, scope_key=self._scope_key,
                            scope_idx=self._scope_idx)
+
+    # -- engine-agnostic round API ------------------------------------------
+
+    def peak_round_bytes(self, P: int, dense_fallback_members: int = 0
+                         ) -> float:
+        """The dense engine's round-matrix footprint: D and GM as (P, n)
+        f32 (what the streamed engine exists to avoid).
+        ``dense_fallback_members`` is a streamed-engine concept (summary
+        stacks are already inside the dense budget here)."""
+        del dense_fallback_members
+        return float(2 * P * self.n * 4)
+
+    def begin_round(self, stacked_deltas: Pytree,
+                    stacked_grads: Pytree) -> "FusedRoundContext":
+        return FusedRoundContext(self, flatten_stacked(stacked_deltas),
+                                 flatten_stacked(stacked_grads))
+
+
+class FusedRoundContext:
+    """One round's worth of state for the dense engine: the flat (P, n)
+    round matrices plus any decoded device rows, behind the same method
+    surface as ``StreamedRoundContext`` — refs are plain (n,) vectors here.
+    """
+
+    name = "fused"
+
+    def __init__(self, engine: HierRoundEngine, D: jax.Array, GM: jax.Array):
+        self.engine = engine
+        self.D, self.GM = D, GM
+        self.P = int(D.shape[0])
+        self._dec: Dict[int, jax.Array] = {}
+        self._dec_g: Dict[int, jax.Array] = {}
+
+    # -- device-uplink decodes ---------------------------------------------
+
+    def add_decoded_row(self, i: int, d_vec: jax.Array,
+                        g_vec: jax.Array) -> None:
+        self._dec[i] = d_vec
+        self._dec_g[i] = g_vec
+
+    def _rows(self, idxs) -> Optional[Tuple[jax.Array, jax.Array]]:
+        """(U, GR) for a cohort whose rows were (partly) replaced by
+        device-uplink decodes; None when no row was decoded (the common
+        path gathers inside the jitted stage instead)."""
+        dec = [k for k, i in enumerate(idxs) if int(i) in self._dec]
+        if not dec:
+            return None
+        sel = jnp.asarray(np.asarray(idxs, np.int32))
+        pos = jnp.asarray(np.asarray(dec, np.int32))
+        U = gather_override(self.D, sel, pos,
+                            tuple(self._dec[int(idxs[k])] for k in dec))
+        GR = gather_override(self.GM, sel, pos,
+                             tuple(self._dec_g[int(idxs[k])] for k in dec))
+        return U, GR
+
+    # -- gradient refs ------------------------------------------------------
+
+    def mean_grad(self, idxs) -> jax.Array:
+        return gather_mean(self.GM, jnp.asarray(np.asarray(idxs, np.int32)))
+
+    def compose_grads(self, refs, counts) -> jax.Array:
+        return weighted_mean_rows(tuple(refs),
+                                  jnp.asarray(np.asarray(counts,
+                                                         np.float32)))
+
+    # -- tier stages ---------------------------------------------------------
+
+    def gateway(self, idxs, *, solve_grad=None,
+                pool_scale: float = 1.0) -> Dict[str, Any]:
+        ones = jnp.ones((len(idxs),), jnp.float32)
+        rows = self._rows(idxs)
+        if rows is None:
+            stage = self.engine.tier(len(idxs), pool_scale=pool_scale,
+                                     gather=True)
+            return stage(self.D, self.GM,
+                         jnp.asarray(np.asarray(idxs, np.int32)), ones,
+                         solve_grad)
+        stage = self.engine.tier(len(idxs), pool_scale=pool_scale)
+        return stage(rows[0], rows[1], ones, solve_grad)
+
+    def merge(self, u_refs, g_refs, counts, *,
+              solve_grad=None) -> Dict[str, Any]:
+        stage = self.engine.tier(len(u_refs), sum_to=1.0, stack=True)
+        return stage(tuple(u_refs), tuple(g_refs),
+                     jnp.asarray(np.asarray(counts, np.float32)), solve_grad)
+
+    def cloud_raw(self, idxs, kind: str, *,
+                  solve_scale: float = 1.0) -> Tuple[jax.Array, Dict]:
+        ones = jnp.ones((len(idxs),), jnp.float32)
+        rows = self._rows(idxs)
+        if rows is None:
+            stage = self.engine.cloud(len(idxs), kind,
+                                      solve_scale=solve_scale, gather=True)
+            return stage(self.D, self.GM,
+                         jnp.asarray(np.asarray(idxs, np.int32)), ones)
+        stage = self.engine.cloud(len(idxs), kind, solve_scale=solve_scale)
+        return stage(rows[0], jnp.mean(rows[1], axis=0), ones)
+
+    def cloud_combo(self, u_refs, counts, ghat, *, kind: str = "combo",
+                    override=None) -> Tuple[jax.Array, Dict]:
+        stage = self.engine.cloud(len(u_refs), kind, stack=True)
+        return stage(tuple(u_refs), ghat,
+                     jnp.asarray(np.asarray(counts, np.float32)),
+                     override=override)
+
+    # -- vector materialization / final apply --------------------------------
+
+    def materialize(self, ref) -> jax.Array:
+        return ref
+
+    def apply(self, params: Pytree, delta_ref) -> Pytree:
+        return apply_delta(params, delta_ref)

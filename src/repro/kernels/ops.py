@@ -29,11 +29,13 @@ from .registry import (backends, dispatch, force_backend, on_tpu,
 from .rng_sketch import rng_sketch_pallas, rng_sketch_xla, \
     rng_sketch_adjoint_xla
 from .sketch import sketch_apply_pallas
+from .stream import stream_stats_pallas, stream_stats_xla
 from .topk import topk_select_pallas
 
 __all__ = ["on_tpu", "gram_and_cross", "gram_block_and_cross",
-           "sketch_apply", "topk_select", "weighted_combine", "sign_sketch",
-           "sign_sketch_adjoint", "flash_decode", "lse_merge",
+           "stream_stats", "sketch_apply", "topk_select",
+           "weighted_combine", "sign_sketch", "sign_sketch_adjoint",
+           "flash_decode", "lse_merge",
            "backends", "dispatch", "force_backend", "select_impl"]
 
 
@@ -41,6 +43,11 @@ def _not_interpret() -> bool:
     # Pallas autotune eligibility: compiled on TPU only; interpret mode is a
     # correctness path, never a contender
     return on_tpu()
+
+
+# autotune-ineligible marker: backends that could win a micro-timing at
+# small/capped shapes but materialize memory the op exists to avoid
+_never = (lambda: False)
 
 
 def _backend_for(use_pallas: Optional[bool],
@@ -93,6 +100,51 @@ def gram_block_and_cross(ua: jax.Array, ub: jax.Array, grad: jax.Array, *,
     """One fused hierarchical-merge block: G_ab = U_a U_bᵀ AND c_a = U_a g
     (named apart from ``core.gram.gram_block``, which returns G alone)."""
     return dispatch("gram_block", ua, ub, grad, block_n=block_n,
+                    backend=_backend_for(use_pallas, backend))
+
+
+def _same_2d(d, g, block_n=0) -> bool:
+    return (getattr(d, "ndim", 0) == 2 and tuple(d.shape) == tuple(g.shape))
+
+
+def _stream_pallas_ok(d, g, block_n=2048) -> bool:
+    # the pallas wrapper pads to (8-row, block_n-column) tiles with jnp.pad
+    # — an O(P·n) input copy that would break the streamed engine's
+    # O(P·chunk) memory model, so dispatch/autotune only offer it on
+    # already-aligned shapes (explicit backend="pallas" still runs the
+    # padded path for validation)
+    return (_same_2d(d, g, block_n) and d.shape[0] % 8 == 0
+            and d.shape[1] % block_n == 0)
+
+
+register_impl("stream_stats", "pallas",
+              lambda d, g, block_n=2048: stream_stats_pallas(
+                  d, g, block_n=block_n, interpret=not on_tpu()),
+              supports=_stream_pallas_ok, eligible=_not_interpret)
+register_impl("stream_stats", "xla",
+              lambda d, g, block_n=1 << 16: stream_stats_xla(
+                  d, g, block_n=block_n),
+              supports=_same_2d)
+# like sign_sketch's ref: the oracle materializes full-width f32 upcasts —
+# the very copies the op exists to avoid — so it must never win an
+# autotune timing at capped shapes and then OOM at production ones; reach
+# it only via backend="ref" / force_backend, as tests do
+register_impl("stream_stats", "ref",
+              lambda d, g, block_n=1 << 16: ref.stream_stats_ref(d, g),
+              supports=_same_2d, eligible=_never)
+
+
+def stream_stats(deltas: jax.Array, grads: jax.Array, *,
+                 use_pallas: Optional[bool] = None,
+                 block_n: int = 1 << 16,
+                 backend: Optional[str] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Fused round statistics G = D Dᵀ, C = D GMᵀ in one streaming pass.
+    deltas/grads (P, n), any float dtype; f32 accumulation, O(P·block_n)
+    working set on the streaming backends.  ``block_n`` is the column chunk
+    and participates in the autotune shape bucket, so the tuner picks the
+    winning (backend, chunk) pair per (P, n) bucket."""
+    return dispatch("stream_stats", deltas, grads, block_n=block_n,
                     backend=_backend_for(use_pallas, backend))
 
 
@@ -176,7 +228,6 @@ def weighted_combine(params_vec: jax.Array, updates: jax.Array,
 # exists to avoid — so it is NEVER an autotune candidate (it could win a
 # micro-timing at toy shapes and OOM at production ones); reach it only via
 # backend="ref" / force_backend, as tests do.
-_never = (lambda: False)
 register_impl("sign_sketch", "pallas",
               lambda u, seed, m, block_n=2048: rng_sketch_pallas(
                   u, seed, m=m, block_n=block_n, interpret=not on_tpu()),

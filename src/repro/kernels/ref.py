@@ -21,6 +21,13 @@ def gram_block_ref(ua: jax.Array, ub: jax.Array, grad: jax.Array):
     return a @ b.T, a @ grad.astype(jnp.float32)
 
 
+def stream_stats_ref(deltas: jax.Array, grads: jax.Array):
+    """(G = D Dᵀ, C = D GMᵀ) in f32 — oracle for kernels.stream."""
+    d = deltas.astype(jnp.float32)
+    g = grads.astype(jnp.float32)
+    return d @ d.T, d @ g.T
+
+
 def sketch_ref(updates: jax.Array, sketch: jax.Array) -> jax.Array:
     """U Rᵀ in f32 — oracle for kernels.sketch (stacked sketch-apply)."""
     return updates.astype(jnp.float32) @ sketch.astype(jnp.float32).T

@@ -1,8 +1,8 @@
 """Backend-aware kernel dispatch with micro-autotuned selection.
 
-Every compute hot spot (``gram``, ``gram_block``, ``sketch``, ``topk``,
-``combine``, ``sign_sketch``/``sign_sketch_adjoint``) registers one
-implementation per *backend*:
+Every compute hot spot (``gram``, ``gram_block``, ``stream_stats``,
+``sketch``, ``topk``, ``combine``, ``sign_sketch``/``sign_sketch_adjoint``)
+registers one implementation per *backend*:
 
   * ``pallas`` — the Pallas TPU kernel, compiled on TPU.  Off-TPU the same
     kernel only runs in interpret mode (Python-per-element), so it is
@@ -18,7 +18,10 @@ Selection is a micro-autotune pass: the first call for a given
 (op, shape-bucket, platform) times every *eligible* candidate on the real
 arguments (one warm-up to compile, then a few timed reps) and caches the
 winner in-process.  Shape buckets round each dimension up to the next power
-of two so e.g. n = 60 000 and n = 65 536 share one entry.  The cache is
+of two so e.g. n = 60 000 and n = 65 536 share one entry; integer keyword
+parameters bucket the same way, so a streaming op's column-chunk size
+(``block_n``) is part of the bucket and the tuner effectively picks the
+winning (backend, chunk) pair.  The cache is
 dumpable (:func:`autotune_records`) — ``benchmarks/kernel_bench.py`` writes
 it to ``BENCH_kernels.json`` so the per-backend picture rides CI.
 

@@ -158,6 +158,27 @@ def cache_pspecs(cfg: ArchConfig, cache_shape: Pytree, mesh: Mesh,
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+def stream_column_shardings(mesh: Mesh, stacked: Pytree) -> Pytree:
+    """Shardings for a *stacked* round pytree (leading P device axis per
+    leaf) that partition the streamed engine's chunk axis: the trailing
+    (column) dim of every ≥2-D leaf is sharded over every available mesh
+    axis, so the ``stream_stats`` scan partitions its column windows across
+    devices and GSPMD all-reduces the (P, P) accumulators.  Guarded by
+    divisibility like every other rule here — a non-dividing leaf stays
+    replicated rather than producing an invalid sharding."""
+    axes = [a for a in ("pod", "data", "model") if a in mesh.shape]
+    name = tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+
+    def leaf_sharding(leaf):
+        shape = tuple(leaf.shape)
+        if name is None or len(shape) < 2:
+            return NamedSharding(mesh, P())
+        spec = (None,) * (len(shape) - 1) + (name,)
+        return NamedSharding(mesh, _guard(spec, shape, mesh))
+
+    return jax.tree_util.tree_map(leaf_sharding, stacked)
+
+
 def named(mesh: Mesh, tree_of_specs: Pytree) -> Pytree:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), tree_of_specs,
