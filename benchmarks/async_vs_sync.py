@@ -49,11 +49,14 @@ def _curves(ds, params, slowdown: float, rounds: int, aggs: int,
     pb = model_payload_bytes(params)
     spe = max(ds.samples_per_device // 10, 1)
 
+    # run names carry the sweep point: each simulation gets its own tracker
+    # scope in the streamed trace (scopes key step monotonicity)
+    tag = f"x{slowdown:g}"
     out = {}
     for agg in ("fedavg", "contextual"):
         cfg = ServerConfig(aggregator=agg, num_devices=n, clients_per_round=10,
                            lr=0.2, batch_size=10, min_epochs=1, max_epochs=20)
-        r = run_simulation(f"{agg}-sync", logistic_loss, logistic_apply,
+        r = run_simulation(f"{agg}-sync-{tag}", logistic_loss, logistic_apply,
                            params, ds, cfg, num_rounds=rounds,
                            selection_seed=SEED, eval_every=eval_every)
         out[f"{agg}-sync"] = sync_wallclock_curve(
@@ -68,8 +71,9 @@ def _curves(ds, params, slowdown: float, rounds: int, aggs: int,
                                              **async_common)),
             ("fedbuff-async", AsyncConfig(aggregator="fedbuff", server_lr=0.5,
                                           **async_common))):
-        r = run_async_simulation(name, logistic_loss, logistic_apply, params,
-                                 ds, cfg, fleet, num_aggregations=aggs,
+        r = run_async_simulation(f"{name}-{tag}", logistic_loss,
+                                 logistic_apply, params, ds, cfg, fleet,
+                                 num_aggregations=aggs,
                                  selection_seed=SEED, eval_every=eval_every)
         out[name] = r.to_curve()
     return out

@@ -1,0 +1,54 @@
+"""Derive committed bench JSON from a streamed ``.jsonl`` trace.
+
+Since the telemetry PR, every bench run streams an append-only event trace
+(``BENCH_<name>.jsonl``, written by ``repro.obs.JsonlTracker``) and the
+committed ``BENCH_<name>.json`` snapshot is *derived* from that trace — the
+trace is the single source of truth.  The bench's JSON-ready results enter
+the stream as summary events carrying one of four marker keys
+(``benchmarks.common.publish_bench`` writes them):
+
+  * ``_bench_meta``   — dict of top-level scalar fields (benchmark, rounds…)
+  * ``_bench_record`` — one entry of the ``records`` list, in order
+  * ``_bench_block``  — ``{"key", "value"}``: a named dict block (e.g. the
+    compress bench's ``acceptance``)
+  * ``_bench_list``   — ``{"key", "value"}``: one entry of a named list
+    (e.g. the kernel bench's ``autotune`` dump)
+
+Everything else in the trace (per-round sim metrics, ledger transfers,
+autotune decisions) is live telemetry and does not shape the JSON.
+
+Stdlib-only on purpose: ``check_regression.py`` and ``summarize_trace.py``
+run in CI before/without jax, and import this next to themselves.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterator, List
+
+
+def iter_events(path: str) -> Iterator[Dict[str, Any]]:
+    """Yield the parsed events of one jsonl trace, in stream order."""
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                yield json.loads(line)
+
+
+def derive_bench_json(path: str) -> Dict[str, Any]:
+    """Rebuild the ``BENCH_<name>.json`` payload from its trace."""
+    out: Dict[str, Any] = {}
+    records: List[dict] = []
+    for event in iter_events(path):
+        m = event["metrics"]
+        if "_bench_meta" in m:
+            out.update(m["_bench_meta"])
+        elif "_bench_record" in m:
+            records.append(m["_bench_record"])
+        elif "_bench_block" in m:
+            out[m["_bench_block"]["key"]] = m["_bench_block"]["value"]
+        elif "_bench_list" in m:
+            out.setdefault(m["_bench_list"]["key"], []).append(
+                m["_bench_list"]["value"])
+    if records:
+        out["records"] = records
+    return out

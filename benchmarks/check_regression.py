@@ -30,6 +30,9 @@ import math
 import os
 import sys
 
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from bench_trace import derive_bench_json  # noqa: E402
+
 # metric classification by field-name substring (first match wins).
 # IGNORE covers machine-dependent fields: real wall-clock, autotune timings
 # and the autotune's backend selection (a faster machine may legitimately
@@ -103,13 +106,20 @@ def _check_records(name: str, old: list, new: list, problems: list) -> None:
 
 def compare(baseline_path: str, fresh_path: str, problems: list) -> None:
     name = os.path.basename(baseline_path)
-    if not os.path.exists(fresh_path):
-        problems.append(f"{name}: fresh file missing (bench did not run?)")
-        return
     with open(baseline_path) as f:
         old = json.load(f)
-    with open(fresh_path) as f:
-        new = json.load(f)
+    if os.path.exists(fresh_path):
+        with open(fresh_path) as f:
+            new = json.load(f)
+    else:
+        # fall back to the jsonl trace twin — same payload, since the JSON
+        # is itself derived from the trace by run.py
+        trace = fresh_path[:-len(".json")] + ".jsonl"
+        if not os.path.exists(trace):
+            problems.append(f"{name}: fresh file missing (bench did not "
+                            "run?)")
+            return
+        new = derive_bench_json(trace)
     for key, val in old.items():
         if key == "records":
             _check_records(name, val, new.get("records", []), problems)

@@ -1,4 +1,6 @@
-"""Shared benchmark utilities: datasets, runners, CSV emission."""
+"""Shared benchmark utilities: datasets, runners, CSV emission, and the
+tracker hop that makes every bench's JSON a projection of its event trace.
+"""
 from __future__ import annotations
 
 import time
@@ -13,6 +15,7 @@ from repro.fl import ServerConfig, SimulationResult, run_simulation
 from repro.models import get_model
 from repro.models.config import ArchConfig
 from repro.models.logistic import logistic_apply, logistic_loss
+from repro.obs import current_tracker
 
 ROWS: List[str] = []
 
@@ -21,6 +24,31 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def publish_bench(results: Dict) -> None:
+    """Stream a bench's JSON-ready results dict into the current tracker as
+    marked summary events (``_bench_meta`` / ``_bench_record`` /
+    ``_bench_block`` / ``_bench_list``) so ``bench_trace.derive_bench_json``
+    can rebuild ``BENCH_<name>.json`` from the trace alone — the jsonl
+    stream, not the returned dict, is what ``run.py --json`` commits."""
+    tr = current_tracker()
+    if not tr.active:
+        return
+    meta = {k: v for k, v in results.items()
+            if not isinstance(v, (list, dict))}
+    if meta:
+        tr.log_summary({"_bench_meta": meta})
+    for rec in results.get("records", []):
+        tr.log_summary({"_bench_record": rec})
+    for key, val in results.items():
+        if key == "records" or not isinstance(val, (list, dict)):
+            continue
+        if isinstance(val, dict):
+            tr.log_summary({"_bench_block": {"key": key, "value": val}})
+        else:
+            for item in val:
+                tr.log_summary({"_bench_list": {"key": key, "value": item}})
 
 
 def dataset(kind: str, seed: int = 0) -> FederatedDataset:

@@ -9,7 +9,7 @@ def run(rounds: int = 25) -> None:
     ds = dataset("mnist")
     for mu in (0.0, 0.1):
         for k2 in (30, 20, 10, 0):
-            r = run_fl(f"k2={k2}", "contextual", ds, rounds, mu=mu,
+            r = run_fl(f"mu={mu}/k2={k2}", "contextual", ds, rounds, mu=mu,
                        grad_sample=k2)
             emit(f"fig2_3/mu={mu}/K2={k2}",
                  r.wall_time / max(rounds, 1) * 1e6,

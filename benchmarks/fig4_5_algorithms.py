@@ -26,7 +26,7 @@ def run(rounds: int = 40) -> None:
     for ds_name in ("mnist", "synthetic_1_1"):
         ds = dataset(ds_name)
         for label, agg, kw in ALGOS:
-            r = run_fl(label, agg, ds, rounds, **kw)
+            r = run_fl(f"{ds_name}/{label}", agg, ds, rounds, **kw)
             emit(f"fig4_5/{ds_name}/{label}",
                  r.wall_time / max(rounds, 1) * 1e6,
                  f"final_loss={r.train_loss[-1]:.4f};"

@@ -14,7 +14,7 @@ def run(rounds: int = 50) -> None:
         for label, agg, kw in (("FedAvg", "fedavg", {}),
                                ("FOLB", "folb", dict(mu=0.1)),
                                ("Contextual", "contextual", {})):
-            r = run_fl(label, agg, ds, rounds, **kw)
+            r = run_fl(f"{ds_name}/{label}", agg, ds, rounds, **kw)
             marks = ";".join(
                 f"acc{int(l*100)}={r.rounds_to_accuracy(l) or '>' + str(rounds)}"
                 for l in levels)

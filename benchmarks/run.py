@@ -11,13 +11,19 @@
   roofline— per-(arch × shape × mesh) roofline terms from the dry-run
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks round counts.
-``--json`` additionally writes each JSON-capable bench (one whose ``run``
-returns a records dict) to ``BENCH_<name>.json`` so the perf trajectory
-accumulates across PRs.
+
+Every bench runs under a ``JsonlTracker`` streaming live per-round events to
+``BENCH_<name>.jsonl`` (tail it to watch a run).  ``--json`` additionally
+writes each JSON-capable bench (one whose ``run`` returns a records dict) to
+``BENCH_<name>.json`` — *derived from the trace* via
+``bench_trace.derive_bench_json``, so the jsonl stream is the single source
+of truth for the committed snapshots.
 """
 import argparse
 import json
 import sys
+
+from .bench_trace import derive_bench_json
 
 
 def _registry():
@@ -65,17 +71,27 @@ def main() -> None:
             ap.error(f"unknown bench(es) {sorted(unknown)}; "
                      f"have {sorted(registry)}")
 
+    from repro.obs import JsonlTracker, use_tracker
+
+    from .common import publish_bench
+
     print("name,us_per_call,derived")
     wrote_json = False
     for name, (module, kwargs_fn, emits_json) in registry.items():
         if only is not None and name not in only:
             continue
-        results = module.run(**kwargs_fn(args.quick))
+        trace_path = f"BENCH_{name}.jsonl"
+        with use_tracker(JsonlTracker(trace_path)):
+            results = module.run(**kwargs_fn(args.quick))
+            if emits_json:
+                publish_bench(results)
+        print(f"streamed {trace_path}", file=sys.stderr)
         if args.json and emits_json:
             path = f"BENCH_{name}.json"
             with open(path, "w") as f:
-                json.dump(results, f, indent=2)
-            print(f"wrote {path}", file=sys.stderr)
+                json.dump(derive_bench_json(trace_path), f, indent=2)
+            print(f"wrote {path} (derived from {trace_path})",
+                  file=sys.stderr)
             wrote_json = True
     if args.json and not wrote_json:
         print("--json: no JSON-capable bench in the selection; "

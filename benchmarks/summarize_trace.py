@@ -1,0 +1,121 @@
+"""Render a markdown job summary from streamed bench traces.
+
+    python benchmarks/summarize_trace.py BENCH_*.jsonl >> "$GITHUB_STEP_SUMMARY"
+
+Stdlib-only (like ``check_regression.py``) so CI can run it without jax or
+the repro package.  For each trace it prints the bench's headline records
+table (identity columns first, then the gated metrics: losses, byte
+accounting, savings, round times), the trace's wall-clock span derived from
+event ``t_wall`` stamps, and — where the trace carries them — the kernel
+autotune decisions that fired during the run.  Replaces the ad-hoc inline
+python that used to live in ``ci.yml``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Any, Dict, List
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from bench_trace import derive_bench_json, iter_events  # noqa: E402
+
+# identity columns lead the table; metric columns follow in this order.
+# Only columns present in at least one record are rendered.
+IDENTITY_COLS = ("scenario", "topology", "method", "fleet_slowdown",
+                 "dataset", "op", "shape", "mode", "scheme", "ratio",
+                 "depth", "gateways")
+METRIC_COLS = ("final_loss", "final_acc", "best_acc",
+               "virtual_time_to_target_s", "loss_gap_vs_flat",
+               "loss_gap_vs_sync", "loss_gap_vs_dense",
+               "loss_gap_streamed_vs_fused", "oracle_max_abs_err",
+               "cloud_uplink_bytes", "uplink_bytes", "total_bytes",
+               "peak_round_matrix_bytes", "dense_round_matrix_bytes",
+               "uplink_savings", "peak_savings_vs_dense", "savings",
+               "meets_mem_target", "t_virtual_end",
+               "steady_wall_time_per_round_s", "compile_wall_time_s")
+MAX_COLS = 9
+
+
+def _fmt(key: str, val: Any) -> str:
+    if val is None:
+        return ""
+    if isinstance(val, bool) or isinstance(val, str):
+        return str(val)
+    if isinstance(val, (int, float)):
+        if "bytes" in key:
+            return f"{val / 2**20:.2f} MB" if val >= 2**20 \
+                else f"{val / 1024:.1f} KB"
+        if "savings" in key or "ratio" in key.lower():
+            return f"{val:.2f}x"
+        if abs(val) != 0 and (abs(val) < 1e-3 or abs(val) >= 1e5):
+            return f"{val:.2e}"
+        return f"{val:.4g}"
+    return str(val)
+
+
+def _records_table(records: List[dict]) -> List[str]:
+    present = set()
+    for r in records:
+        present.update(r)
+    cols = [c for c in IDENTITY_COLS if c in present]
+    cols += [c for c in METRIC_COLS if c in present][:MAX_COLS - len(cols)]
+    if not cols:
+        return []
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "---|" * len(cols)]
+    for r in records:
+        lines.append("| " + " | ".join(_fmt(c, r.get(c)) for c in cols)
+                     + " |")
+    return lines
+
+
+def _autotune_table(events: List[Dict[str, Any]]) -> List[str]:
+    picks = [e["metrics"] for e in events
+             if "kernels/autotune/op" in e.get("metrics", {})]
+    if not picks:
+        return []
+    lines = ["", "**Autotune picks**", "",
+             "| op | bucket | backend | forced |", "|---|---|---|---|"]
+    for m in picks:
+        lines.append(f"| {m['kernels/autotune/op']} "
+                     f"| `{m.get('kernels/autotune/bucket', '')}` "
+                     f"| {m.get('kernels/autotune/backend', '')} "
+                     f"| {m.get('kernels/autotune/forced', '')} |")
+    return lines
+
+
+def summarize(path: str) -> List[str]:
+    events = list(iter_events(path))
+    payload = derive_bench_json(path)
+    name = os.path.basename(path)[len("BENCH_"):-len(".jsonl")] \
+        if os.path.basename(path).startswith("BENCH_") \
+        else os.path.basename(path)
+    lines = [f"### {payload.get('benchmark', name)} "
+             f"({len(events)} events)"]
+    walls = [e["t_wall"] for e in events if "t_wall" in e]
+    if len(walls) >= 2:
+        lines.append(f"trace span: {max(walls) - min(walls):.1f}s wall")
+    scalars = {k: v for k, v in payload.items()
+               if not isinstance(v, (list, dict)) and k != "benchmark"}
+    if scalars:
+        lines.append(", ".join(f"{k}={_fmt(k, v)}"
+                               for k, v in sorted(scalars.items())))
+    lines.append("")
+    lines += _records_table(payload.get("records", []))
+    lines += _autotune_table(events)
+    lines.append("")
+    return lines
+
+
+def main(argv: List[str]) -> int:
+    paths = [p for p in argv if os.path.exists(p)]
+    if not paths:
+        print("summarize_trace: no trace files found", file=sys.stderr)
+        return 1
+    for path in sorted(paths):
+        print("\n".join(summarize(path)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,6 +1,7 @@
 """Evaluation metrics for the FL experiments (paper §IV-A4)."""
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Any, Callable, Tuple
 
 import jax
@@ -25,12 +26,25 @@ def evaluate_classifier(apply_fn: Callable, params: Pytree, x: jax.Array,
     return total_nll / n, total_correct / n
 
 
+@lru_cache(maxsize=32)
+def _global_loss_fn(loss_fn: Callable) -> Callable:
+    """One jitted evaluator per loss function, with ``params`` as a traced
+    *argument* — the former closure re-defined (and re-jitted) a fresh
+    ``per_device`` on every call, paying a full recompile each round
+    (``tests/test_fl_system.py`` counts the traces)."""
+    @jax.jit
+    def run(params, x, y, mask):
+        def per_device(cx, cy, cm):
+            return (loss_fn(params, (cx, cy, cm))
+                    * jnp.maximum(cm.sum(), 1.0), cm.sum())
+
+        losses, counts = jax.vmap(per_device)(x, y, mask)
+        return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)
+
+    return run
+
+
 def global_train_loss(loss_fn: Callable, params: Pytree, x: jax.Array,
                       y: jax.Array, mask: jax.Array) -> float:
     """f(w) = mask-weighted mean loss over ALL devices' data (paper eq. 1)."""
-    @jax.jit
-    def per_device(cx, cy, cm):
-        return loss_fn(params, (cx, cy, cm)) * jnp.maximum(cm.sum(), 1.0), cm.sum()
-
-    losses, counts = jax.vmap(per_device)(x, y, mask)
-    return float(jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0))
+    return float(_global_loss_fn(loss_fn)(params, x, y, mask))

@@ -35,18 +35,45 @@ import time
 from collections import deque
 from dataclasses import dataclass, field, replace as dc_replace
 from functools import lru_cache, partial
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..data.federated import FederatedDataset
+from ..obs import current_tracker
 from .client import client_update
 from .metrics import evaluate_classifier, global_train_loss
 from .server import RoundState, ServerConfig, build_round_fn, init_server, sample_round
 
 Pytree = Any
+
+# how much per-round α/γ history the result dataclasses retain:
+#   True  — unbounded (the pre-tracker behavior; fine for short runs)
+#   False — none (the tracker stream carries the per-round values instead)
+#   int N — a rolling window of the last N entries (long fleet runs used to
+#           OOM the host on P-vectors × thousands of rounds)
+RecordHistory = Union[bool, int]
+
+
+def _history_push(hist: List, item: Any, record_history: RecordHistory
+                  ) -> None:
+    if record_history is False or record_history == 0:
+        return
+    hist.append(item)
+    if record_history is not True and len(hist) > int(record_history):
+        del hist[0]
+
+
+def _vec_stats(prefix: str, v) -> Dict[str, float]:
+    """Flat summary stats of a weight vector for one tracker event (the full
+    vector stays out of the stream unless the caller opted in)."""
+    a = np.asarray(v, np.float64)
+    if a.size == 0:
+        return {}
+    return {f"{prefix}_mean": float(a.mean()), f"{prefix}_std": float(a.std()),
+            f"{prefix}_min": float(a.min()), f"{prefix}_max": float(a.max())}
 
 
 # ---------------------------------------------------------------------------
@@ -116,7 +143,8 @@ def run_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                    init_params: Pytree, dataset: FederatedDataset,
                    cfg: ServerConfig, num_rounds: int,
                    selection_seed: int = 1234, eval_every: int = 1,
-                   collect_alpha: bool = False) -> SimulationResult:
+                   collect_alpha: bool = False,
+                   record_history: RecordHistory = True) -> SimulationResult:
     round_fn = _round_fn_cached(loss_fn, cfg, dataset.samples_per_device)
     steps_per_epoch = max(dataset.samples_per_device // cfg.batch_size, 1)
 
@@ -126,6 +154,10 @@ def run_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     sel_rng = np.random.RandomState(selection_seed)  # shared across algorithms
     key = jax.random.PRNGKey(selection_seed)
 
+    tr = current_tracker().scope(f"sync/{name}")
+    if tr.active:
+        tr.jot(runtime="sync", run=name, aggregator=cfg.aggregator,
+               num_rounds=num_rounds)
     result = SimulationResult(name=name)
     t0 = time.time()
     for t in range(num_rounds):
@@ -135,7 +167,11 @@ def run_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                                jnp.asarray(grad_sel), jnp.asarray(num_steps),
                                round_key)
         if collect_alpha and "alpha" in info:
-            result.alpha_history.append(np.asarray(info["alpha"]))
+            _history_push(result.alpha_history, np.asarray(info["alpha"]),
+                          record_history)
+        event: Dict[str, Any] = {"round": t} if tr.active else {}
+        if tr.active and "alpha" in info:
+            event.update(_vec_stats("alpha", info["alpha"]))
         if (t + 1) % eval_every == 0 or t == num_rounds - 1:
             loss = global_train_loss(loss_fn, state.params, data[0], data[1],
                                      data[2])
@@ -145,7 +181,15 @@ def run_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             result.train_loss.append(loss)
             result.test_acc.append(acc)
             result.test_nll.append(nll)
+            if tr.active:
+                event.update(train_loss=loss, test_acc=acc, test_nll=nll)
+        if tr.active:
+            tr.log(event, step=t)
     result.wall_time = time.time() - t0
+    if tr.active and result.train_loss:
+        tr.log_summary({"final_train_loss": result.train_loss[-1],
+                        "final_test_acc": result.test_acc[-1],
+                        "wall_time_s": result.wall_time})
     return result
 
 
@@ -181,7 +225,9 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                          init_params: Pytree, dataset: FederatedDataset,
                          cfg, fleet, num_aggregations: int,
                          selection_seed: int = 1234, eval_every: int = 1,
-                         collect_alpha: bool = False) -> AsyncSimulationResult:
+                         collect_alpha: bool = False,
+                         record_history: RecordHistory = True
+                         ) -> AsyncSimulationResult:
     """Event-driven async FL (``cfg`` is a :class:`repro.edge.AsyncConfig`).
 
     The server keeps up to ``cfg.concurrency`` tasks in flight (default: one
@@ -241,6 +287,11 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     for _ in range(concurrency):
         dispatch_next()
 
+    tr = current_tracker().scope(f"async/{name}")
+    if tr.active:
+        tr.jot(runtime="async", run=name, aggregator=cfg.aggregator,
+               num_aggregations=num_aggregations,
+               buffer_size=cfg.buffer_size)
     result = AsyncSimulationResult(
         name=name, updates_per_device=np.zeros(fleet.num_devices, np.int64))
     max_events = 1000 + 50 * num_aggregations * cfg.buffer_size
@@ -270,9 +321,18 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             params, info = buffer.flush(params, version)
             version += 1
             aggs += 1
-            result.staleness_mean.append(float(np.mean(info["staleness"])))
+            stale = float(np.mean(info["staleness"]))
+            result.staleness_mean.append(stale)
             if collect_alpha and "alpha" in info:
-                result.alpha_history.append(np.asarray(info["alpha"]))
+                _history_push(result.alpha_history,
+                              np.asarray(info["alpha"]), record_history)
+            event: Dict[str, Any] = {}
+            if tr.active:
+                event = {"flush": aggs, "t_virtual": scheduler.now,
+                         "version": version, "staleness_mean": stale,
+                         "staleness_max": float(np.max(info["staleness"]))}
+                if "alpha" in info:
+                    event.update(_vec_stats("alpha", info["alpha"]))
             if aggs % eval_every == 0 or aggs == num_aggregations:
                 loss = global_train_loss(loss_fn, params, x, y, mask)
                 nll, acc = evaluate_classifier(apply_fn, params, test_x, test_y)
@@ -281,11 +341,21 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                 result.train_loss.append(loss)
                 result.test_acc.append(acc)
                 result.test_nll.append(nll)
+                if tr.active:
+                    event.update(train_loss=loss, test_acc=acc, test_nll=nll)
+            if tr.active:
+                tr.log(event, step=aggs)
         dispatch_next()                 # fresh task on the freshest model
     result.wall_time = time.time() - t0
     result.dispatched = scheduler.stats.dispatched
     result.arrived = scheduler.stats.arrived
     result.dropped = scheduler.stats.dropped
+    if tr.active:
+        tr.log_summary({"dispatched": result.dispatched,
+                        "arrived": result.arrived,
+                        "dropped": result.dropped,
+                        "t_virtual_end": scheduler.now,
+                        "wall_time_s": result.wall_time})
     return result
 
 
@@ -330,7 +400,9 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                         collect_gamma: bool = False,
                         engine: str = "auto",
                         stream_chunk: Optional[int] = None,
-                        mesh=None) -> HierSimulationResult:
+                        mesh=None,
+                        record_history: RecordHistory = True
+                        ) -> HierSimulationResult:
     """Synchronous rounds over a multi-tier topology (``cfg`` is a
     :class:`repro.hier.HierConfig`, ``topology`` a :class:`repro.hier.Topology`).
 
@@ -388,7 +460,14 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         fleet, seed=selection_seed,
         flops_per_step=model_flops_per_step(params, cfg.batch_size),
         payload_bytes=mbytes)
-    ledger = CommLedger(topology.depth)
+    tr = current_tracker().scope(f"hier/{name}")
+    if tr.active:
+        tr.jot(runtime="hier", run=name, aggregator=cfg.aggregator,
+               depth=topology.depth, num_rounds=num_rounds)
+    # the ledger streams every transfer it records (per-tier up/down bytes
+    # stamped with the virtual clock) the moment it is recorded
+    ledger = CommLedger(topology.depth, tracker=tr.scope("comm"),
+                        clock=lambda: scheduler.now)
     sel_rng = np.random.RandomState(selection_seed)
     base_key = jax.random.PRNGKey(selection_seed)
 
@@ -796,7 +875,16 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         round_walls.append(time.perf_counter() - round_t0)
 
         if collect_gamma and "gamma" in round_info:
-            result.gamma_history.append(np.asarray(round_info["gamma"]))
+            _history_push(result.gamma_history,
+                          np.asarray(round_info["gamma"]), record_history)
+        event: Dict[str, Any] = {}
+        if tr.active:
+            event = {"round": t, "t_virtual": scheduler.now,
+                     "round_virtual_s": scheduler.now - round_start,
+                     "round_wall_s": round_walls[-1], "participants": P,
+                     "rounds_skipped": result.rounds_skipped}
+            if "gamma" in round_info:
+                event.update(_vec_stats("gamma", round_info["gamma"]))
         if (t + 1) % eval_every == 0 or t == num_rounds - 1:
             loss = global_train_loss(loss_fn, params, x, y, mask)
             nll, acc = evaluate_classifier(apply_fn, params, test_x, test_y)
@@ -804,6 +892,10 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             result.train_loss.append(loss)
             result.test_acc.append(acc)
             result.test_nll.append(nll)
+            if tr.active:
+                event.update(train_loss=loss, test_acc=acc, test_nll=nll)
+        if tr.active:
+            tr.log(event, step=t)
     result.wall_time = time.time() - t0
     result.comm = ledger.report()
     result.cloud_uplink_bytes = ledger.cloud_uplink_bytes
@@ -831,4 +923,10 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             "steady_wall_time_per_round_s": float(np.median(steady)),
             "rounds_wall_time_s": float(np.sum(round_walls)),
         })
+    if tr.active:
+        tr.log_summary({**result.engine,
+                        "cloud_uplink_bytes": result.cloud_uplink_bytes,
+                        "total_bytes": result.total_bytes,
+                        "t_virtual_end": scheduler.now,
+                        "wall_time_s": result.wall_time})
     return result

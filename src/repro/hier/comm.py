@@ -17,9 +17,10 @@ exactly as the PR-1 async accounting assumes).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 from ..core.flatten import tree_size
+from ..obs import Tracker
 
 FLOAT_BYTES = 4.0
 
@@ -71,18 +72,39 @@ class CommLedger:
     Tier t records transfers whose *receiver* sits on tier t — so the cloud
     tier's ``bytes_up`` is exactly the cloud-uplink volume the acceptance
     criterion bounds.
+
+    With a ``tracker`` (``repro.obs``), every transfer is ALSO streamed the
+    moment it is recorded — one event per record call with the tier,
+    direction, bytes, link seconds and (when a ``clock`` callable is given,
+    normally the event scheduler's ``lambda: scheduler.now``) the virtual
+    timestamp — so long runs expose their traffic live instead of only in
+    the end-of-run :meth:`report`.  A noop/absent tracker costs one
+    attribute check per record.
     """
 
-    def __init__(self, depth: int):
+    def __init__(self, depth: int, tracker: Optional[Tracker] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.depth = depth
         self.tiers: Dict[int, TierTraffic] = {
             t: TierTraffic() for t in range(depth + 1)}
+        self._tracker = tracker
+        self._clock = clock
+
+    def _stream(self, tier: int, direction: str, nbytes: float,
+                seconds: float) -> None:
+        event = {"tier": tier, "dir": direction, "bytes": nbytes,
+                 "link_seconds": seconds}
+        if self._clock is not None:
+            event["t_virtual"] = self._clock()
+        self._tracker.log(event)
 
     def record_up(self, tier: int, nbytes: float, seconds: float = 0.0) -> None:
         tt = self.tiers[tier]
         tt.bytes_up += nbytes
         tt.transfers_up += 1
         tt.link_seconds += seconds
+        if self._tracker is not None and self._tracker.active:
+            self._stream(tier, "up", nbytes, seconds)
 
     def record_down(self, tier: int, nbytes: float,
                     seconds: float = 0.0) -> None:
@@ -90,6 +112,8 @@ class CommLedger:
         tt.bytes_down += nbytes
         tt.transfers_down += 1
         tt.link_seconds += seconds
+        if self._tracker is not None and self._tracker.active:
+            self._stream(tier, "down", nbytes, seconds)
 
     @property
     def cloud_uplink_bytes(self) -> float:

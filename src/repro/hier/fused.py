@@ -41,6 +41,7 @@ from ..core.solve import (SolveConfig, bound_value, solve_alpha,
                           theorem1_reduction)
 from ..core.gram import gram_residual
 from ..kernels.registry import select_impl_for
+from ..obs import current_tracker
 
 Pytree = Any
 
@@ -116,6 +117,16 @@ def clear_stage_cache() -> None:
     _STAGES.clear()
 
 
+def _log_stage_build(kind: str, K: int, n: int, backend: str) -> None:
+    """Stream a stage-cache miss: each event is one new shape-keyed jit
+    stage about to compile — the per-shape story behind the hier runtime's
+    ``compile_wall_time_s`` vs steady-state split."""
+    tr = current_tracker()
+    if tr.active:
+        tr.scope("hier/fused").log({"stage_build": kind, "K": K, "n": n,
+                                    "gram_backend": backend})
+
+
 def _scoped(U: jax.Array, g: jax.Array, idx) -> Tuple[jax.Array, jax.Array]:
     return (U, g) if idx is None else (U[:, idx], g[idx])
 
@@ -152,6 +163,7 @@ def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
     fn = _STAGES.get(key)
     if fn is not None:
         return fn
+    _log_stage_build("summary", K, n, gram_impl.backend)
 
     cfg = solve_cfg
     if pool_scale != 1.0:
@@ -222,6 +234,7 @@ def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
     fn = _STAGES.get(key)
     if fn is not None:
         return fn
+    _log_stage_build("cloud", P, n, gram_impl.backend)
 
     cfg = solve_cfg
     if kind == "combo":

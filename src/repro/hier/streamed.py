@@ -55,6 +55,7 @@ import numpy as np
 from ..core.flatten import ChunkedFlatView, mix_rows
 from ..core.solve import SolveConfig, bound_value, solve_alpha
 from ..kernels.registry import force_backend, select_impl_for
+from ..obs import current_tracker
 from . import fused as _fused
 
 Pytree = Any
@@ -414,6 +415,17 @@ class StreamedRoundEngine:
                                     for s in scoped))
         else:                       # scope matched nothing: degenerate zeros
             G = C = jnp.zeros((P, P), jnp.float32)
+        tr = current_tracker()
+        if tr.active:
+            # the streamed engine's memory story, per round: how many column
+            # chunks the accumulate pass walks and the deterministic peak
+            # working set it holds instead of the dense (P, n) matrices
+            chunks = sum(-(-s.width // self.chunk) for s in scoped)
+            tr.scope("hier/streamed").log({
+                "P": P, "chunk_cols": self.chunk, "num_chunks": chunks,
+                "num_slabs": len(scoped),
+                "peak_round_matrix_bytes": self.peak_round_bytes(P),
+                "dense_round_matrix_bytes": dense_round_bytes(P, self.n)})
         return StreamedRoundContext(self, stacked_deltas, stacked_grads,
                                     dview, gview, G, C)
 

@@ -47,6 +47,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from ..obs import current_tracker
+
 # preference order used when timing is impossible (tracer args, no cache)
 _STATIC_ORDER = ("pallas", "xla", "ref")
 
@@ -89,6 +91,28 @@ class AutotuneEntry:
 _IMPLS: Dict[str, Dict[str, KernelImpl]] = {}
 _CACHE: Dict[Tuple, AutotuneEntry] = {}
 _FORCED: List[Tuple[Optional[str], str]] = []   # (op or None, backend) stack
+_EMITTED: set = set()      # (op, bucket, backend, forced) already streamed
+
+
+def _emit_decision(op: str, bucket: Tuple, backend: str,
+                   timings_us: Dict[str, float], forced: bool) -> None:
+    """Stream a dispatch decision the moment a bucket is resolved: the
+    autotune winner with its candidate timings, or the backend a
+    ``force_backend``/env override pinned.  Emitted at most once per
+    (op, bucket, backend, forced) so the hot dispatch path never re-logs;
+    with the default noop tracker this is one attribute check."""
+    tr = current_tracker()
+    if not tr.active:
+        return
+    key = (op, bucket, backend, forced)
+    if key in _EMITTED:
+        return
+    _EMITTED.add(key)
+    event: Dict[str, Any] = {"op": op, "bucket": repr(bucket),
+                             "backend": backend, "forced": forced}
+    for name, us in sorted(timings_us.items()):
+        event[f"us_per_call_{name}"] = us
+    tr.scope("kernels/autotune").log(event)
 
 
 def register_impl(op: str, backend: str, fn: Callable, *,
@@ -203,6 +227,7 @@ def _autotune(op: str, bucket: Tuple, args: Tuple, kw: Dict) -> AutotuneEntry:
         if entry.timings_us:
             entry.backend = min(entry.timings_us, key=entry.timings_us.get)
     _CACHE[(op, bucket)] = entry
+    _emit_decision(op, bucket, entry.backend, entry.timings_us, forced=False)
     return entry
 
 
@@ -219,6 +244,9 @@ def select_impl(op: str, *args: Any, **kw: Any) -> KernelImpl:
                            f"'{op}' (have {backends(op)})")
         impl = _IMPLS[op][forced]
         if impl.ok_for(*args, **kw):
+            if current_tracker().active:
+                _emit_decision(op, _bucket(args, kw), forced, {},
+                               forced=True)
             return impl
         # forced backend cannot run these shapes (supports() rejected):
         # fall through to normal selection — forcing is a preference, the
@@ -258,6 +286,9 @@ def select_impl_for(op: str, *specs: "jax.ShapeDtypeStruct",
                            f"'{op}' (have {backends(op)})")
         impl = _IMPLS[op][forced]
         if impl.ok_for(*specs, **kw):
+            if current_tracker().active:
+                _emit_decision(op, _bucket(specs, kw), forced, {},
+                               forced=True)
             return impl                 # preference honored, no arrays built
     bucket = _bucket(specs, kw)
     entry = _CACHE.get((op, bucket))
@@ -306,3 +337,4 @@ def autotune_records() -> List[Dict[str, Any]]:
 
 def clear_autotune_cache() -> None:
     _CACHE.clear()
+    _EMITTED.clear()

@@ -1,0 +1,15 @@
+"""Streaming observability: pluggable trackers for live per-round metrics.
+
+See ``repro.obs.tracker`` for the protocol and the process-wide
+:func:`current_tracker` context, ``repro.obs.jsonl`` for the append-only
+file stream benches and CI consume.
+"""
+from .jsonl import JsonlTracker, read_trace
+from .tracker import (NOOP, CompositeTracker, InMemoryTracker, NoopTracker,
+                      TrackedEvent, Tracker, current_tracker, use_tracker)
+
+__all__ = [
+    "NOOP", "CompositeTracker", "InMemoryTracker", "JsonlTracker",
+    "NoopTracker", "TrackedEvent", "Tracker", "current_tracker",
+    "read_trace", "use_tracker",
+]

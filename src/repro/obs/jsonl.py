@@ -1,0 +1,98 @@
+"""Append-only jsonl event stream — the file-backed tracker.
+
+One JSON object per line, in emission order::
+
+    {"step": 12, "t_wall": 1754700000.123, "kind": "metrics",
+     "scope": "hier/run0",
+     "metrics": {"hier/run0/train_loss": 0.41, "hier/run0/t_virtual": 88.2}}
+
+``step`` is monotone *per scope*: within one scope explicit steps may
+repeat or grow but never go backwards (a regression raises — the stream is
+the ground truth for event ordering), while independent scopes — e.g. the
+several simulations a bench runs into one trace — each keep their own step
+counter.  Events logged without a step inherit their scope's latest one.
+``t_wall`` is the host wall-clock at emission, so a live run can be
+tailed::
+
+    tail -f BENCH_hier.jsonl | python -m json.tool --json-lines
+
+:func:`read_trace` parses a stream back into :class:`TrackedEvent`s;
+``tests/test_obs.py`` pins the write → parse → same-metrics round trip.
+The parser intentionally lives next to the writer, but the *bench* JSON
+derivation (records → ``BENCH_*.json``) is stdlib-only and lives in
+``benchmarks/bench_trace.py`` so CI scripts can run it without jax.
+"""
+from __future__ import annotations
+
+import json
+from typing import IO, Dict, List, Optional, Union
+
+import numpy as np
+
+from .tracker import TrackedEvent, Tracker
+
+
+def _jsonable(obj):
+    """numpy scalars/arrays → python; everything else must be JSON-ready."""
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    raise TypeError(f"not JSON-serializable: {type(obj).__name__}")
+
+
+class JsonlTracker(Tracker):
+    """Streams every event to an append-only ``.jsonl`` file.
+
+    ``path`` may be a filename (truncated unless ``append=True``) or an open
+    text handle (left open on ``finish``).  Every write is flushed — the
+    point is a live, tailable stream, not write throughput.
+    """
+
+    def __init__(self, path: Union[str, IO[str]], *, append: bool = False):
+        if hasattr(path, "write"):
+            self._fh: IO[str] = path          # type: ignore[assignment]
+            self._owns = False
+        else:
+            self._fh = open(path, "a" if append else "w")
+            self._owns = True
+        self._last_step: Dict[str, int] = {}
+
+    def _record(self, event: TrackedEvent) -> None:
+        last = self._last_step.get(event.scope, 0)
+        if event.step is not None:
+            if event.step < last:
+                raise ValueError(
+                    f"non-monotonic step in scope '{event.scope}': "
+                    f"{event.step} after {last}")
+            last = self._last_step[event.scope] = event.step
+        line = {"step": last, "t_wall": event.t_wall, "kind": event.kind,
+                "scope": event.scope, "metrics": event.metrics}
+        self._fh.write(json.dumps(line, default=_jsonable) + "\n")
+        self._fh.flush()
+
+    def finish(self) -> None:
+        if self._owns and not self._fh.closed:
+            self._fh.close()
+
+
+def read_trace(path: Union[str, IO[str]],
+               kind: Optional[str] = None) -> List[TrackedEvent]:
+    """Parse a jsonl trace back into events (optionally one ``kind`` only).
+    """
+    if hasattr(path, "read"):
+        lines = path.read().splitlines()
+    else:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    events = []
+    for line in lines:
+        if not line.strip():
+            continue
+        obj = json.loads(line)
+        if kind is not None and obj["kind"] != kind:
+            continue
+        events.append(TrackedEvent(kind=obj["kind"], metrics=obj["metrics"],
+                                   step=obj["step"], t_wall=obj["t_wall"],
+                                   scope=obj.get("scope", "")))
+    return events

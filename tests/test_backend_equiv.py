@@ -168,6 +168,34 @@ def test_autotune_caches_and_reports():
     assert len(registry.autotune_records()) == before
 
 
+def test_autotune_decisions_stream_through_tracker():
+    """Every resolved dispatch — autotuned or forced — announces itself once
+    per (op, bucket, backend) on the active tracker (satellite: registry
+    telemetry)."""
+    from repro.obs import InMemoryTracker, use_tracker
+
+    registry.clear_autotune_cache()
+    d = _data(K=4, n=256)
+    mem = InMemoryTracker()
+    with use_tracker(mem):
+        ops.gram_and_cross(d[0], d[1])        # autotuned pick
+        ops.gram_and_cross(d[0], d[1])        # cached: no second event
+        with registry.force_backend("xla"):
+            ops.gram_and_cross(d[0], d[1])    # forced pick, same bucket
+    picks = [e.metrics for e in mem.metrics_events()
+             if "kernels/autotune/op" in e.metrics]
+    tuned = [m for m in picks if not m["kernels/autotune/forced"]]
+    assert len(tuned) == 1
+    assert tuned[0]["kernels/autotune/op"] == "gram"
+    assert tuned[0]["kernels/autotune/backend"] in ops.backends("gram")
+    assert any(k.startswith("kernels/autotune/us_per_call_")
+               for k in tuned[0])
+    forced = [m for m in picks if m["kernels/autotune/forced"]]
+    assert len(forced) == 1
+    assert forced[0]["kernels/autotune/op"] == "gram"
+    assert forced[0]["kernels/autotune/backend"] == "xla"
+
+
 def test_force_backend_scoped_and_use_pallas_compat():
     d = _data(K=4, n=256)
     want = ref.gram_ref(d[0], d[1])

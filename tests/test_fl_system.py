@@ -149,6 +149,41 @@ def test_dirichlet_partition_skew():
     assert np.mean(fracs) > 0.3
 
 
+def test_global_train_loss_traces_once_across_rounds():
+    """Regression: ``global_train_loss`` used to close a fresh ``@jax.jit``
+    over ``params`` on every call, recompiling each round.  The hoisted
+    evaluator takes params as a traced argument — repeated same-shape calls
+    must not re-trace (the trace counter is a python side effect, so it
+    ticks exactly once per compilation)."""
+    from repro.fl.metrics import global_train_loss
+
+    traces = {"n": 0}
+
+    def counting_loss(params, batch):
+        traces["n"] += 1
+        cx, cy, cm = batch
+        logits = cx @ params["w"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, cy[:, None], axis=-1)[:, 0]
+        return jnp.sum(nll * cm) / jnp.maximum(cm.sum(), 1.0)
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 30, 16)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(4, 30)))
+    mask = jnp.ones((4, 30), jnp.float32)
+    p1 = {"w": jnp.asarray(rng.normal(size=(16, 10)).astype(np.float32))}
+    p2 = {"w": p1["w"] * 3.0}       # rescaled logits: loss must move
+
+    l1 = global_train_loss(counting_loss, p1, x, y, mask)
+    assert traces["n"] == 1
+    for params in (p1, p2, p1):         # new values, same shapes: no retrace
+        global_train_loss(counting_loss, params, x, y, mask)
+    assert traces["n"] == 1
+    assert np.isfinite(l1)
+    assert global_train_loss(counting_loss, p2, x, y, mask) != pytest.approx(
+        l1)                             # params actually flow through
+
+
 def test_checkpoint_roundtrip(tmp_path):
     from repro.checkpoint import load_checkpoint, save_checkpoint
     tree = {"w": jnp.arange(12.0).reshape(3, 4),

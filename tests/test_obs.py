@@ -1,0 +1,275 @@
+"""Streaming telemetry: tracker protocol, jsonl stream, sim instrumentation.
+
+Covers the observability layer end to end: unit behavior of the tracker
+implementations (scoping, fan-out, per-scope monotone steps, jsonl round
+trip), the bench trace → BENCH JSON derivation, and the live events the
+three simulation loops emit — including ordering under the async/hier
+virtual clock and the guarantee that instrumentation never perturbs
+results.
+"""
+import io
+import json
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.edge import AsyncConfig, bimodal_fleet
+from repro.fl import (ServerConfig, run_async_simulation, run_hier_simulation,
+                      run_simulation)
+from repro.hier import HierConfig, two_tier_topology
+from repro.models.logistic import logistic_apply, logistic_loss
+from repro.obs import (NOOP, CompositeTracker, InMemoryTracker, JsonlTracker,
+                       NoopTracker, current_tracker, read_trace, use_tracker)
+
+import repro.edge.async_server  # noqa: F401  (registers async aggregators)
+import repro.hier.hier_server  # noqa: F401  (registers hier aggregators)
+
+
+# ---------------------------------------------------------------------------
+# tracker protocol units
+# ---------------------------------------------------------------------------
+
+def test_default_tracker_is_inactive_noop():
+    assert current_tracker() is NOOP
+    assert not NOOP.active
+    assert NOOP.scope("a").scope("b") is NOOP      # no per-scope allocation
+    NOOP.log({"x": 1}, step=3)                      # all swallowed
+    NOOP.log_summary({"x": 1})
+    NOOP.jot(run="r")
+
+
+def test_use_tracker_stacks_and_restores():
+    t1, t2 = InMemoryTracker(), InMemoryTracker()
+    with use_tracker(t1):
+        assert current_tracker() is t1
+        with use_tracker(t2):
+            assert current_tracker() is t2
+        assert current_tracker() is t1
+        current_tracker().log({"a": 1})
+    assert current_tracker() is NOOP
+    assert t1.series("a") == [1]
+    assert t2.events == []
+
+
+def test_scope_prefixes_keys_and_threads_scope_path():
+    tr = InMemoryTracker()
+    tr.scope("hier").scope("gw3").log({"bytes": 7}, step=2)
+    (e,) = tr.events
+    assert e.metrics == {"hier/gw3/bytes": 7}
+    assert e.scope == "hier/gw3"
+    assert e.step == 2 and e.kind == "metrics" and e.t_wall > 0
+    scoped = tr.scope("x")
+    assert scoped.active == tr.active
+
+
+def test_composite_fans_out_every_event():
+    a, b = InMemoryTracker(), InMemoryTracker()
+    comp = CompositeTracker([a, b])
+    assert comp.active
+    comp.scope("s").log({"v": 1}, step=0)
+    comp.log_summary({"done": True})
+    comp.jot(name="run")
+    for t in (a, b):
+        assert [e.kind for e in t.events] == ["metrics", "summary", "tags"]
+        assert t.series("s/v") == [1]
+    assert not CompositeTracker([NoopTracker()]).active
+
+
+# ---------------------------------------------------------------------------
+# jsonl stream
+# ---------------------------------------------------------------------------
+
+def test_jsonl_round_trip(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    with use_tracker(JsonlTracker(path)) as tr:
+        tr.scope("run").log({"loss": 0.5, "vec": np.arange(3)}, step=0)
+        tr.scope("run").log({"loss": np.float32(0.25)}, step=1)
+        tr.log_summary({"final": 0.25})
+    events = read_trace(path)
+    assert [e.kind for e in events] == ["metrics", "metrics", "summary"]
+    assert events[0].metrics == {"run/loss": 0.5, "run/vec": [0, 1, 2]}
+    assert events[1].metrics["run/loss"] == pytest.approx(0.25)
+    assert events[0].scope == "run" and events[2].scope == ""
+    # stepless events inherit their own scope's latest step (root is at 0)
+    assert [e.step for e in events] == [0, 1, 0]
+    assert read_trace(path, kind="summary")[0].metrics == {"final": 0.25}
+    # every line is valid json with the stream fields (tailable live)
+    for line in open(path):
+        obj = json.loads(line)
+        assert set(obj) == {"step", "t_wall", "kind", "scope", "metrics"}
+
+
+def test_jsonl_step_monotone_per_scope():
+    tr = JsonlTracker(io.StringIO())
+    a, b = tr.scope("runA"), tr.scope("runB")
+    a.log({"x": 1}, step=5)
+    b.log({"x": 1}, step=0)         # independent scope restarts at 0: fine
+    a.log({"x": 1}, step=5)         # repeat is fine
+    with pytest.raises(ValueError, match="non-monotonic step"):
+        a.log({"x": 1}, step=4)
+    b.log({"x": 1}, step=1)         # runB unaffected by runA's violation
+
+
+def test_jsonl_rejects_unserializable():
+    tr = JsonlTracker(io.StringIO())
+    with pytest.raises(TypeError, match="not JSON-serializable"):
+        tr.log({"fn": lambda: None})
+
+
+# ---------------------------------------------------------------------------
+# bench trace → BENCH_*.json derivation
+# ---------------------------------------------------------------------------
+
+def test_publish_bench_derives_identical_json(tmp_path):
+    sys.path.insert(0, "benchmarks")
+    try:
+        from bench_trace import derive_bench_json
+        from common import publish_bench
+    finally:
+        sys.path.pop(0)
+    results = {"benchmark": "toy", "rounds": 3,
+               "records": [{"method": "a", "final_loss": 0.5},
+                           {"method": "b", "final_loss": 0.25}],
+               "acceptance": {"meets_target": True},
+               "autotune": [{"op": "gram"}, {"op": "colsum"}]}
+    path = str(tmp_path / "BENCH_toy.jsonl")
+    with use_tracker(JsonlTracker(path)) as tr:
+        # live telemetry interleaves with the published results
+        tr.scope("sim").log({"train_loss": 1.0}, step=0)
+        publish_bench(results)
+    assert derive_bench_json(path) == results
+
+
+# ---------------------------------------------------------------------------
+# simulation instrumentation (shared tiny problem from conftest)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny(tiny_edge_problem):
+    ds, params, _ = tiny_edge_problem
+    return ds, params
+
+
+def _sync(ds, params, **kw):
+    cfg = ServerConfig(aggregator="contextual", num_devices=ds.num_devices,
+                       clients_per_round=6, lr=0.2, batch_size=10,
+                       min_epochs=1, max_epochs=4)
+    base = dict(num_rounds=4, selection_seed=11, eval_every=2,
+                collect_alpha=True)
+    base.update(kw)
+    return run_simulation("t", logistic_loss, logistic_apply, params, ds,
+                          cfg, **base)
+
+
+def _hier(ds, params, **kw):
+    fleet = bimodal_fleet(ds.num_devices, slowdown=4.0, dropout_slow=0.2,
+                          seed=0)
+    topo = two_tier_topology(fleet, 3)
+    cfg = HierConfig(aggregator="hier_contextual", lr=0.2, batch_size=10,
+                     min_epochs=1, max_epochs=4)
+    base = dict(num_rounds=4, selection_seed=11, eval_every=2)
+    base.update(kw)
+    return run_hier_simulation("t", logistic_loss, logistic_apply, params,
+                               ds, cfg, topo, **base)
+
+
+def test_sync_sim_streams_rounds_and_summary(tiny):
+    ds, params = tiny
+    mem = InMemoryTracker()
+    with use_tracker(mem):
+        r = _sync(ds, params)
+    rounds = [e for e in mem.metrics_events() if "sync/t/round" in e.metrics]
+    assert [e.metrics["sync/t/round"] for e in rounds] == [0, 1, 2, 3]
+    assert [e.step for e in rounds] == [0, 1, 2, 3]
+    assert mem.series("sync/t/alpha_mean")      # α stage weights streamed
+    losses = mem.series("sync/t/train_loss")
+    assert losses == pytest.approx(r.train_loss)
+    (summary,) = [e for e in mem.events if e.kind == "summary"]
+    assert summary.metrics["sync/t/final_train_loss"] == \
+        pytest.approx(r.train_loss[-1])
+    tags = [e for e in mem.events if e.kind == "tags"]
+    assert tags and tags[0].metrics["sync/t/runtime"] == "sync"
+
+
+def test_async_sim_event_order_under_virtual_clock(tiny):
+    ds, params = tiny
+    cfg = AsyncConfig(aggregator="contextual_async",
+                      num_devices=ds.num_devices, buffer_size=3, lr=0.2,
+                      batch_size=10, min_epochs=1, max_epochs=4)
+    fleet = bimodal_fleet(ds.num_devices, slowdown=8.0, dropout_slow=0.2,
+                          seed=0)
+    mem = InMemoryTracker()
+    with use_tracker(mem):
+        r = run_async_simulation("t", logistic_loss, logistic_apply, params,
+                                 ds, cfg, fleet, num_aggregations=6,
+                                 selection_seed=11, eval_every=2)
+    flushes = [e for e in mem.metrics_events()
+               if "async/t/flush" in e.metrics]
+    assert [e.metrics["async/t/flush"] for e in flushes] == [1, 2, 3, 4, 5, 6]
+    tv = [e.metrics["async/t/t_virtual"] for e in flushes]
+    assert all(b >= a for a, b in zip(tv, tv[1:]))   # virtual clock monotone
+    assert all(e.metrics["async/t/staleness_mean"] >= 0 for e in flushes)
+    (summary,) = [e for e in mem.events if e.kind == "summary"]
+    assert summary.metrics["async/t/dispatched"] == r.dispatched
+    assert summary.metrics["async/t/t_virtual_end"] >= tv[-1]
+
+
+def test_hier_sim_streams_comm_ledger_and_engine(tiny):
+    ds, params = tiny
+    mem = InMemoryTracker()
+    with use_tracker(mem):
+        r = _hier(ds, params)
+    rounds = [e for e in mem.metrics_events() if "hier/t/round" in e.metrics]
+    assert [e.metrics["hier/t/round"] for e in rounds] == [0, 1, 2, 3]
+    tv = [e.metrics["hier/t/t_virtual"] for e in rounds]
+    assert all(b >= a for a, b in zip(tv, tv[1:]))
+    # CommLedger transfers streamed as recorded, virtual-clock stamped and
+    # ordered within the round structure
+    comm = [e for e in mem.metrics_events()
+            if "hier/t/comm/bytes" in e.metrics]
+    assert comm
+    ctv = [e.metrics["hier/t/comm/t_virtual"] for e in comm]
+    assert all(b >= a for a, b in zip(ctv, ctv[1:]))
+    assert sum(e.metrics["hier/t/comm/bytes"] for e in comm) == \
+        pytest.approx(r.total_bytes)
+    assert {e.metrics["hier/t/comm/tier"] for e in comm} <= {0, 1, 2}
+    # fused engine stage builds announced on cache miss
+    (summary,) = [e for e in mem.events if e.kind == "summary"]
+    assert summary.metrics["hier/t/engine_name"] == "fused"
+    assert summary.metrics["hier/t/cloud_uplink_bytes"] == \
+        pytest.approx(r.cloud_uplink_bytes)
+
+
+def test_instrumentation_does_not_perturb_results(tiny):
+    """Same seeds with and without a live tracker → identical trajectories
+    (the telemetry layer only observes)."""
+    ds, params = tiny
+    r_silent = _hier(ds, params)
+    with use_tracker(InMemoryTracker()):
+        r_traced = _hier(ds, params)
+    assert r_traced.train_loss == r_silent.train_loss
+    assert r_traced.times == r_silent.times
+    assert r_traced.total_bytes == r_silent.total_bytes
+
+
+def test_record_history_caps_alpha_history(tiny):
+    ds, params = tiny
+    full = _sync(ds, params)
+    assert len(full.alpha_history) == 4            # True: unbounded (default)
+    capped = _sync(ds, params, record_history=2)
+    assert len(capped.alpha_history) == 2          # rolling last-2 window
+    np.testing.assert_allclose(capped.alpha_history[-1],
+                               full.alpha_history[-1])
+    off = _sync(ds, params, record_history=False)
+    assert off.alpha_history == []
+    assert off.train_loss == full.train_loss       # knob only affects history
+
+
+def test_record_history_caps_gamma_history(tiny):
+    ds, params = tiny
+    capped = _hier(ds, params, collect_gamma=True, record_history=1)
+    assert len(capped.gamma_history) == 1
+    off = _hier(ds, params, collect_gamma=True, record_history=0)
+    assert off.gamma_history == []
