@@ -34,21 +34,63 @@ def iter_events(path: str) -> Iterator[Dict[str, Any]]:
                 yield json.loads(line)
 
 
-def derive_bench_json(path: str) -> Dict[str, Any]:
-    """Rebuild the ``BENCH_<name>.json`` payload from its trace."""
-    out: Dict[str, Any] = {}
-    records: List[dict] = []
-    for event in iter_events(path):
+class BenchFold:
+    """Incremental ``BENCH_<name>.json`` derivation: feed events one at a
+    time (so a summarizer can fold the payload inside its own single pass
+    over the trace) and read ``payload()`` at the end."""
+
+    def __init__(self) -> None:
+        self._out: Dict[str, Any] = {}
+        self._records: List[dict] = []
+
+    def add(self, event: Dict[str, Any]) -> None:
         m = event["metrics"]
         if "_bench_meta" in m:
-            out.update(m["_bench_meta"])
+            self._out.update(m["_bench_meta"])
         elif "_bench_record" in m:
-            records.append(m["_bench_record"])
+            self._records.append(m["_bench_record"])
         elif "_bench_block" in m:
-            out[m["_bench_block"]["key"]] = m["_bench_block"]["value"]
+            self._out[m["_bench_block"]["key"]] = m["_bench_block"]["value"]
         elif "_bench_list" in m:
-            out.setdefault(m["_bench_list"]["key"], []).append(
+            self._out.setdefault(m["_bench_list"]["key"], []).append(
                 m["_bench_list"]["value"])
-    if records:
-        out["records"] = records
-    return out
+
+    def payload(self) -> Dict[str, Any]:
+        out = dict(self._out)
+        if self._records:
+            out["records"] = list(self._records)
+        return out
+
+
+def derive_bench_json(path: str) -> Dict[str, Any]:
+    """Rebuild the ``BENCH_<name>.json`` payload from its trace."""
+    fold = BenchFold()
+    for event in iter_events(path):
+        fold.add(event)
+    return fold.payload()
+
+
+# mirrors repro.obs.spans.RESERVED_KEYS (kept in sync by tests/test_obs.py)
+SPAN_RESERVED = ("name", "path", "depth", "flat", "t0_wall", "dur_wall_s",
+                 "t0_virtual", "dur_virtual_s")
+
+
+def span_fields(event: Dict[str, Any]) -> Dict[str, Any]:
+    """Normalized field dict of one ``kind == "span"`` raw trace event:
+    spans are emitted through the root tracker so keys normally arrive
+    bare, but a span logged under a scoped view carries the scope prefix —
+    strip it so every trace tool sees one layout."""
+    m = event["metrics"]
+    scope = event.get("scope", "")
+    if scope:
+        prefix = scope + "/"
+        m = {(k[len(prefix):] if k.startswith(prefix) else k): v
+             for k, v in m.items()}
+    return m
+
+
+def iter_spans(path: str) -> Iterator[Dict[str, Any]]:
+    """Yield the normalized span events of one trace, in stream order."""
+    for event in iter_events(path):
+        if event.get("kind") == "span":
+            yield span_fields(event)

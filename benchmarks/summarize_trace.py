@@ -6,18 +6,28 @@ Stdlib-only (like ``check_regression.py``) so CI can run it without jax or
 the repro package.  For each trace it prints the bench's headline records
 table (identity columns first, then the gated metrics: losses, byte
 accounting, savings, round times), the trace's wall-clock span derived from
-event ``t_wall`` stamps, and — where the trace carries them — the kernel
-autotune decisions that fired during the run.  Replaces the ad-hoc inline
-python that used to live in ``ci.yml``.
+event ``t_wall`` stamps, the slowest spans recorded by ``repro.obs.spans``
+(where time went: compile vs solve vs eval, on both clocks), and — where
+the trace carries them — the kernel autotune decisions that fired during
+the run.  Replaces the ad-hoc inline python that used to live in
+``ci.yml``.
+
+Each trace is read in ONE streaming pass (a long fleet trace never
+materializes), and a missing, empty or truncated trace is a hard error:
+one line on stderr naming the file and the problem, non-zero exit — CI
+fails loudly instead of summarizing a half-written stream as if it were
+the whole run.
 """
 from __future__ import annotations
 
+import heapq
+import json
 import os
 import sys
-from typing import Any, Dict, List
+from typing import Any, Dict, Iterator, List, Tuple
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-from bench_trace import derive_bench_json, iter_events  # noqa: E402
+from bench_trace import BenchFold, SPAN_RESERVED, span_fields  # noqa: E402
 
 # identity columns lead the table; metric columns follow in this order.
 # Only columns present in at least one record are rendered.
@@ -34,6 +44,11 @@ METRIC_COLS = ("final_loss", "final_acc", "best_acc",
                "meets_mem_target", "t_virtual_end",
                "steady_wall_time_per_round_s", "compile_wall_time_s")
 MAX_COLS = 9
+TOP_SPANS = 10
+
+
+class TraceError(Exception):
+    """A trace that cannot be summarized (missing/empty/truncated)."""
 
 
 def _fmt(key: str, val: Any) -> str:
@@ -69,9 +84,7 @@ def _records_table(records: List[dict]) -> List[str]:
     return lines
 
 
-def _autotune_table(events: List[Dict[str, Any]]) -> List[str]:
-    picks = [e["metrics"] for e in events
-             if "kernels/autotune/op" in e.get("metrics", {})]
+def _autotune_table(picks: List[Dict[str, Any]]) -> List[str]:
     if not picks:
         return []
     lines = ["", "**Autotune picks**", "",
@@ -84,17 +97,88 @@ def _autotune_table(events: List[Dict[str, Any]]) -> List[str]:
     return lines
 
 
+def _dur(v: Any) -> str:
+    if not isinstance(v, (int, float)):
+        return ""
+    return f"{v * 1e3:.1f} ms" if v < 1.0 else f"{v:.2f} s"
+
+
+def slowest_spans_table(spans: List[Dict[str, Any]],
+                        total: int) -> List[str]:
+    """Markdown table of the slowest spans (wall clock), dual-clock
+    columns plus the caller tags — the CI job-summary triage view."""
+    if not spans:
+        return []
+    lines = ["", f"**Slowest spans** (top {len(spans)} of {total})", "",
+             "| span | wall | virtual | tags |", "|---|---|---|---|"]
+    for f in spans:
+        tags = ", ".join(f"{k}={f[k]}" for k in sorted(f)
+                         if k not in SPAN_RESERVED)
+        lines.append(f"| `{f.get('path', f.get('name', '?'))}` "
+                     f"| {_dur(f.get('dur_wall_s'))} "
+                     f"| {_dur(f.get('dur_virtual_s'))} "
+                     f"| {tags} |")
+    return lines
+
+
+def _iter_raw(path: str) -> Iterator[Tuple[int, Dict[str, Any]]]:
+    with open(path) as fh:
+        for lineno, line in enumerate(fh, start=1):
+            if not line.strip():
+                continue
+            try:
+                yield lineno, json.loads(line)
+            except json.JSONDecodeError as exc:
+                raise TraceError(f"{path}: truncated or corrupt trace at "
+                                 f"line {lineno}: {exc.msg}") from exc
+
+
 def summarize(path: str) -> List[str]:
-    events = list(iter_events(path))
-    payload = derive_bench_json(path)
+    """One streaming pass over one trace → markdown lines.  Raises
+    :class:`TraceError` on a missing, empty or truncated trace."""
+    if not os.path.exists(path):
+        raise TraceError(f"{path}: no such trace file")
+    if os.path.getsize(path) == 0:
+        raise TraceError(f"{path}: trace is empty (0 bytes)")
+    fold = BenchFold()
+    n_events = n_spans = 0
+    wall_min = wall_max = None
+    autotune: List[Dict[str, Any]] = []
+    slow: List[Tuple[float, int, Dict[str, Any]]] = []   # min-heap of top-K
+    for lineno, event in _iter_raw(path):
+        n_events += 1
+        t_wall = event.get("t_wall")
+        if isinstance(t_wall, (int, float)):
+            wall_min = t_wall if wall_min is None else min(wall_min, t_wall)
+            wall_max = t_wall if wall_max is None else max(wall_max, t_wall)
+        fold.add(event)
+        m = event.get("metrics", {})
+        if "kernels/autotune/op" in m:
+            autotune.append(m)
+        if event.get("kind") == "span":
+            f = span_fields(event)
+            n_spans += 1
+            if f.get("flat"):
+                # a flat span's wall interval brackets unrelated host work
+                # (it lives between scheduler events); only its virtual
+                # duration means anything, so it stays out of the
+                # wall-sorted triage table
+                continue
+            item = (float(f.get("dur_wall_s", 0.0)), n_spans, f)
+            if len(slow) < TOP_SPANS:
+                heapq.heappush(slow, item)
+            else:
+                heapq.heappushpop(slow, item)
+    if n_events == 0:
+        raise TraceError(f"{path}: trace has no events")
+    payload = fold.payload()
     name = os.path.basename(path)[len("BENCH_"):-len(".jsonl")] \
         if os.path.basename(path).startswith("BENCH_") \
         else os.path.basename(path)
     lines = [f"### {payload.get('benchmark', name)} "
-             f"({len(events)} events)"]
-    walls = [e["t_wall"] for e in events if "t_wall" in e]
-    if len(walls) >= 2:
-        lines.append(f"trace span: {max(walls) - min(walls):.1f}s wall")
+             f"({n_events} events, {n_spans} spans)"]
+    if wall_min is not None and wall_max is not None:
+        lines.append(f"trace span: {wall_max - wall_min:.1f}s wall")
     scalars = {k: v for k, v in payload.items()
                if not isinstance(v, (list, dict)) and k != "benchmark"}
     if scalars:
@@ -102,19 +186,25 @@ def summarize(path: str) -> List[str]:
                                for k, v in sorted(scalars.items())))
     lines.append("")
     lines += _records_table(payload.get("records", []))
-    lines += _autotune_table(events)
+    lines += slowest_spans_table(
+        [f for _, _, f in sorted(slow, reverse=True)], n_spans)
+    lines += _autotune_table(autotune)
     lines.append("")
     return lines
 
 
 def main(argv: List[str]) -> int:
-    paths = [p for p in argv if os.path.exists(p)]
-    if not paths:
-        print("summarize_trace: no trace files found", file=sys.stderr)
+    if not argv:
+        print("summarize_trace: no trace files given", file=sys.stderr)
         return 1
-    for path in sorted(paths):
-        print("\n".join(summarize(path)))
-    return 0
+    rc = 0
+    for path in sorted(argv):
+        try:
+            print("\n".join(summarize(path)))
+        except TraceError as exc:
+            print(f"summarize_trace: {exc}", file=sys.stderr)
+            rc = 1
+    return rc
 
 
 if __name__ == "__main__":

@@ -1,0 +1,138 @@
+"""Diff two bench traces by span path — which stage moved, on which clock.
+
+    python benchmarks/trace_diff.py BASE.jsonl NEW.jsonl [--top N]
+
+A bench regression report ("hier got 8% slower") answers *whether* a run
+moved, not *where*.  Both traces carry the dual-clock spans recorded by
+``repro.obs.spans``; this tool aggregates each trace per span path (count,
+total wall seconds, total virtual seconds) and prints one aligned markdown
+table sorted by absolute wall-time delta — compile spans, solve stages,
+link transfers and eval blocks each on their own row, so "the hier bench
+regressed" becomes "``round/event_loop/gateway/stage_summary_compile``
+gained 300 ms".  Paths present in only one trace render with a ``—`` on
+the other side (a stage that appeared/disappeared is usually the story).
+
+Stdlib-only (like ``check_regression.py`` / ``summarize_trace.py``) so CI
+diffs the committed baseline trace against the fresh run without jax.
+Missing or unreadable trace files exit non-zero with a one-line error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from bench_trace import iter_spans  # noqa: E402
+
+
+class PathStats:
+    __slots__ = ("count", "wall_s", "virtual_s")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.wall_s = 0.0
+        self.virtual_s = 0.0
+
+
+def collect(path: str) -> Dict[str, PathStats]:
+    """Aggregate one trace's spans per span path (one streaming pass)."""
+    stats: Dict[str, PathStats] = {}
+    for f in iter_spans(path):
+        key = str(f.get("path", f.get("name", "?")))
+        st = stats.get(key)
+        if st is None:
+            st = stats[key] = PathStats()
+        st.count += 1
+        # a flat span (scheduler task/transfer lifetime) brackets unrelated
+        # host work between its begin and end events — its wall interval is
+        # not host time spent, so only nested spans feed the wall columns
+        if not f.get("flat"):
+            st.wall_s += float(f.get("dur_wall_s", 0.0))
+        st.virtual_s += float(f.get("dur_virtual_s", 0.0))
+    return stats
+
+
+def _ms(v: Optional[float]) -> str:
+    return "—" if v is None else f"{v * 1e3:.1f}"
+
+
+def _delta(a: Optional[float], b: Optional[float]) -> str:
+    if a is None or b is None:
+        return "—"
+    d = b - a
+    pct = f" ({d / a * 100:+.1f}%)" if a > 1e-9 else ""
+    return f"{d * 1e3:+.1f}{pct}"
+
+
+def diff_lines(base: Dict[str, PathStats], new: Dict[str, PathStats],
+               base_name: str, new_name: str, top: int) -> List[str]:
+    paths = sorted(set(base) | set(new))
+
+    def sort_key(p: str) -> float:
+        a = base[p].wall_s if p in base else 0.0
+        b = new[p].wall_s if p in new else 0.0
+        return abs(b - a)
+
+    paths.sort(key=sort_key, reverse=True)
+    shown = paths[:top]
+    lines = [f"### trace diff: `{base_name}` → `{new_name}`", "",
+             "| span path | count | wall base (ms) | wall new (ms) "
+             "| Δ wall (ms) | virt base (ms) | virt new (ms) |",
+             "|---|---|---|---|---|---|---|"]
+    for p in shown:
+        a, b = base.get(p), new.get(p)
+        counts = f"{a.count if a else 0}→{b.count if b else 0}"
+        lines.append(
+            f"| `{p}` | {counts} "
+            f"| {_ms(a.wall_s if a else None)} "
+            f"| {_ms(b.wall_s if b else None)} "
+            f"| {_delta(a.wall_s if a else None, b.wall_s if b else None)} "
+            f"| {_ms(a.virtual_s if a else None)} "
+            f"| {_ms(b.virtual_s if b else None)} |")
+    tw_a = sum(s.wall_s for s in base.values())
+    tw_b = sum(s.wall_s for s in new.values())
+    lines += ["",
+              f"total span wall: {tw_a * 1e3:.1f} ms → {tw_b * 1e3:.1f} ms "
+              f"(Δ {_delta(tw_a, tw_b)} ms); "
+              f"{len(paths)} span paths ({len(paths) - len(shown)} below "
+              f"the top-{top} cut)", ""]
+    return lines
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="trace_diff",
+        description="Diff two bench traces by span path "
+                    "(per-stage wall/virtual deltas).")
+    ap.add_argument("base", help="baseline trace (.jsonl)")
+    ap.add_argument("new", help="new trace (.jsonl)")
+    ap.add_argument("--top", type=int, default=20,
+                    help="rows to show, sorted by |Δ wall| (default 20)")
+    args = ap.parse_args(argv)
+
+    stats = {}
+    for path in (args.base, args.new):
+        if not os.path.exists(path):
+            print(f"trace_diff: {path}: no such trace file", file=sys.stderr)
+            return 2
+        try:
+            stats[path] = collect(path)
+        except json.JSONDecodeError as exc:
+            print(f"trace_diff: {path}: truncated or corrupt trace: "
+                  f"{exc.msg}", file=sys.stderr)
+            return 2
+    if not stats[args.base] and not stats[args.new]:
+        print("trace_diff: no spans in either trace (were they recorded "
+              "before span tracing?)", file=sys.stderr)
+        return 1
+    print("\n".join(diff_lines(stats[args.base], stats[args.new],
+                               os.path.basename(args.base),
+                               os.path.basename(args.new), args.top)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

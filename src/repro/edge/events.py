@@ -25,6 +25,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..obs import spans
 from .profiles import Fleet
 
 
@@ -69,6 +70,11 @@ class EventScheduler:
         self._heap: List[Event] = []
         self._seq = itertools.count()
         self._transfer_seqs: set = set()  # pending link events (not devices)
+        # open span handles per in-flight event (repro.obs.spans): a
+        # dispatch/schedule opens a FLAT span at the event's virtual start,
+        # pop closes it at the terminal virtual time.  Empty (and free)
+        # under the default noop tracker — spans.begin returns None there.
+        self._spans: Dict[int, object] = {}
 
     # -- dispatch ----------------------------------------------------------
     def dispatch(self, device_id: int, num_steps: int, version: int,
@@ -100,6 +106,10 @@ class EventScheduler:
         evt = Event(start + duration, seq, kind, device_id,
                     num_steps=num_steps, version=version)
         heapq.heappush(self._heap, (evt.time, evt.seq, evt))
+        h = spans.begin("sched/task", t_virtual=start, device=device_id,
+                        num_steps=num_steps, version=version)
+        if h is not None:
+            self._spans[seq] = h
         return evt
 
     def schedule(self, delay: float, node_id: int,
@@ -120,6 +130,10 @@ class EventScheduler:
         evt = Event(self.now + delay, seq, kind, node_id,
                     num_steps=num_steps, version=version)
         heapq.heappush(self._heap, (evt.time, evt.seq, evt))
+        h = spans.begin("sched/transfer", t_virtual=self.now, node=node_id,
+                        version=version)
+        if h is not None:
+            self._spans[seq] = h
         return evt
 
     # -- event loop --------------------------------------------------------
@@ -136,10 +150,16 @@ class EventScheduler:
         if evt.seq in self._transfer_seqs:
             self._transfer_seqs.discard(evt.seq)
             self.stats.transfers_done += 1
+            outcome = "delivered"
         elif evt.kind == EventKind.ARRIVAL:
             self.stats.arrived += 1
+            outcome = "arrival"
         else:
             self.stats.dropped += 1
+            outcome = "dropout"
+        h = self._spans.pop(evt.seq, None)
+        if h is not None:
+            spans.end(h, t_virtual=evt.time, outcome=outcome)
         return evt
 
     # -- invariants (cheap enough to assert in tests) ----------------------

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..data.federated import FederatedDataset
-from ..obs import current_tracker
+from ..obs import current_tracker, spans
 from .client import client_update
 from .metrics import evaluate_classifier, global_train_loss
 from .server import RoundState, ServerConfig, build_round_fn, init_server, sample_round
@@ -161,30 +161,35 @@ def run_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     result = SimulationResult(name=name)
     t0 = time.time()
     for t in range(num_rounds):
-        sel, grad_sel, num_steps = sample_round(sel_rng, cfg, steps_per_epoch)
-        key, round_key = jax.random.split(key)
-        state, info = round_fn(state, data, jnp.asarray(sel),
-                               jnp.asarray(grad_sel), jnp.asarray(num_steps),
-                               round_key)
-        if collect_alpha and "alpha" in info:
-            _history_push(result.alpha_history, np.asarray(info["alpha"]),
-                          record_history)
-        event: Dict[str, Any] = {"round": t} if tr.active else {}
-        if tr.active and "alpha" in info:
-            event.update(_vec_stats("alpha", info["alpha"]))
-        if (t + 1) % eval_every == 0 or t == num_rounds - 1:
-            loss = global_train_loss(loss_fn, state.params, data[0], data[1],
-                                     data[2])
-            nll, acc = evaluate_classifier(apply_fn, state.params,
-                                           jnp.asarray(dataset.test_x),
-                                           jnp.asarray(dataset.test_y))
-            result.train_loss.append(loss)
-            result.test_acc.append(acc)
-            result.test_nll.append(nll)
+        with spans.span("round", round=t):
+            sel, grad_sel, num_steps = sample_round(sel_rng, cfg, steps_per_epoch)
+            key, round_key = jax.random.split(key)
+            # one jit call fuses the cohort's client updates with the
+            # aggregation solve, so they share a span
+            with spans.span("update_aggregate"):
+                state, info = round_fn(state, data, jnp.asarray(sel),
+                                       jnp.asarray(grad_sel),
+                                       jnp.asarray(num_steps), round_key)
+            if collect_alpha and "alpha" in info:
+                _history_push(result.alpha_history, np.asarray(info["alpha"]),
+                              record_history)
+            event: Dict[str, Any] = {"round": t} if tr.active else {}
+            if tr.active and "alpha" in info:
+                event.update(_vec_stats("alpha", info["alpha"]))
+            if (t + 1) % eval_every == 0 or t == num_rounds - 1:
+                with spans.span("eval"):
+                    loss = global_train_loss(loss_fn, state.params, data[0],
+                                             data[1], data[2])
+                    nll, acc = evaluate_classifier(
+                        apply_fn, state.params, jnp.asarray(dataset.test_x),
+                        jnp.asarray(dataset.test_y))
+                result.train_loss.append(loss)
+                result.test_acc.append(acc)
+                result.test_nll.append(nll)
+                if tr.active:
+                    event.update(train_loss=loss, test_acc=acc, test_nll=nll)
             if tr.active:
-                event.update(train_loss=loss, test_acc=acc, test_nll=nll)
-        if tr.active:
-            tr.log(event, step=t)
+                tr.log(event, step=t)
     result.wall_time = time.time() - t0
     if tr.active and result.train_loss:
         tr.log_summary({"final_train_loss": result.train_loss[-1],
@@ -298,54 +303,61 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     aggs = 0
     events_processed = 0
     t0 = time.time()
-    while aggs < num_aggregations:
-        if events_processed >= max_events:
-            raise RuntimeError(f"exceeded {max_events} events before reaching "
-                               f"{num_aggregations} aggregations")
-        events_processed += 1
-        evt = scheduler.pop()
-        if evt is None:
-            raise RuntimeError("event queue exhausted before reaching "
-                               f"{num_aggregations} aggregations")
-        disp_params, disp_version = in_flight.pop(evt.device_id)
-        idle.append(evt.device_id)      # back of the queue either way
-        if evt.kind == EventKind.DROPOUT:
-            dispatch_next()             # lost work; slot goes to next waiter
-            continue
-        key = jax.random.fold_in(base_key, evt.seq)
-        delta, grad = upd(disp_params, x[evt.device_id], y[evt.device_id],
-                          mask[evt.device_id], jnp.int32(evt.num_steps), key)
-        buffer.add(BufferedUpdate(delta, grad, disp_version, evt.device_id))
-        result.updates_per_device[evt.device_id] += 1
-        if buffer.ready():
-            params, info = buffer.flush(params, version)
-            version += 1
-            aggs += 1
-            stale = float(np.mean(info["staleness"]))
-            result.staleness_mean.append(stale)
-            if collect_alpha and "alpha" in info:
-                _history_push(result.alpha_history,
-                              np.asarray(info["alpha"]), record_history)
-            event: Dict[str, Any] = {}
-            if tr.active:
-                event = {"flush": aggs, "t_virtual": scheduler.now,
-                         "version": version, "staleness_mean": stale,
-                         "staleness_max": float(np.max(info["staleness"]))}
-                if "alpha" in info:
-                    event.update(_vec_stats("alpha", info["alpha"]))
-            if aggs % eval_every == 0 or aggs == num_aggregations:
-                loss = global_train_loss(loss_fn, params, x, y, mask)
-                nll, acc = evaluate_classifier(apply_fn, params, test_x, test_y)
-                result.times.append(scheduler.now)
-                result.versions.append(version)
-                result.train_loss.append(loss)
-                result.test_acc.append(acc)
-                result.test_nll.append(nll)
+    with spans.use_virtual_clock(lambda: scheduler.now):
+        while aggs < num_aggregations:
+            if events_processed >= max_events:
+                raise RuntimeError(f"exceeded {max_events} events before reaching "
+                                   f"{num_aggregations} aggregations")
+            events_processed += 1
+            evt = scheduler.pop()
+            if evt is None:
+                raise RuntimeError("event queue exhausted before reaching "
+                                   f"{num_aggregations} aggregations")
+            disp_params, disp_version = in_flight.pop(evt.device_id)
+            idle.append(evt.device_id)      # back of the queue either way
+            if evt.kind == EventKind.DROPOUT:
+                dispatch_next()             # lost work; slot goes to next waiter
+                continue
+            key = jax.random.fold_in(base_key, evt.seq)
+            with spans.span("client_update", device=evt.device_id,
+                            staleness=version - disp_version):
+                delta, grad = upd(disp_params, x[evt.device_id],
+                                  y[evt.device_id], mask[evt.device_id],
+                                  jnp.int32(evt.num_steps), key)
+            buffer.add(BufferedUpdate(delta, grad, disp_version, evt.device_id))
+            result.updates_per_device[evt.device_id] += 1
+            if buffer.ready():
+                with spans.span("aggregate", flush=aggs + 1):
+                    params, info = buffer.flush(params, version)
+                version += 1
+                aggs += 1
+                stale = float(np.mean(info["staleness"]))
+                result.staleness_mean.append(stale)
+                if collect_alpha and "alpha" in info:
+                    _history_push(result.alpha_history,
+                                  np.asarray(info["alpha"]), record_history)
+                event: Dict[str, Any] = {}
                 if tr.active:
-                    event.update(train_loss=loss, test_acc=acc, test_nll=nll)
-            if tr.active:
-                tr.log(event, step=aggs)
-        dispatch_next()                 # fresh task on the freshest model
+                    event = {"flush": aggs, "t_virtual": scheduler.now,
+                             "version": version, "staleness_mean": stale,
+                             "staleness_max": float(np.max(info["staleness"]))}
+                    if "alpha" in info:
+                        event.update(_vec_stats("alpha", info["alpha"]))
+                if aggs % eval_every == 0 or aggs == num_aggregations:
+                    with spans.span("eval"):
+                        loss = global_train_loss(loss_fn, params, x, y, mask)
+                        nll, acc = evaluate_classifier(apply_fn, params,
+                                                       test_x, test_y)
+                    result.times.append(scheduler.now)
+                    result.versions.append(version)
+                    result.train_loss.append(loss)
+                    result.test_acc.append(acc)
+                    result.test_nll.append(nll)
+                    if tr.active:
+                        event.update(train_loss=loss, test_acc=acc, test_nll=nll)
+                if tr.active:
+                    tr.log(event, step=aggs)
+            dispatch_next()                 # fresh task on the freshest model
     result.wall_time = time.time() - t0
     result.dispatched = scheduler.stats.dispatched
     result.arrived = scheduler.stats.arrived
@@ -534,368 +546,379 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     result = HierSimulationResult(name=name)
     round_walls: List[float] = []
     t0 = time.time()
-    for t in range(num_rounds):
-        round_t0 = time.perf_counter()
-        round_start = scheduler.now
-        # -- selection (identical-selection protocol: one shared RNG) -------
-        participants: List[tuple] = []      # (device_id, gateway_id)
-        for gw in gateways:
-            devs = np.asarray(gw.children)
-            if cfg.fan_in is not None and cfg.fan_in < len(devs):
-                devs = np.sort(sel_rng.choice(devs, cfg.fan_in,
-                                              replace=False))
-            participants.extend((int(d), gw.node_id) for d in devs)
-        epochs = sel_rng.randint(cfg.min_epochs, cfg.max_epochs + 1,
-                                 size=len(participants))
-        num_steps = (epochs * steps_per_epoch).astype(np.int32)
-        P = len(participants)
+    with spans.use_virtual_clock(lambda: scheduler.now):
+        for t in range(num_rounds):
+            with spans.span("round", round=t):
+                round_t0 = time.perf_counter()
+                round_start = scheduler.now
+                # -- selection (identical-selection protocol: one shared RNG) -------
+                participants: List[tuple] = []      # (device_id, gateway_id)
+                for gw in gateways:
+                    devs = np.asarray(gw.children)
+                    if cfg.fan_in is not None and cfg.fan_in < len(devs):
+                        devs = np.sort(sel_rng.choice(devs, cfg.fan_in,
+                                                      replace=False))
+                    participants.extend((int(d), gw.node_id) for d in devs)
+                epochs = sel_rng.randint(cfg.min_epochs, cfg.max_epochs + 1,
+                                         size=len(participants))
+                num_steps = (epochs * steps_per_epoch).astype(np.int32)
+                P = len(participants)
 
-        # -- downlink broadcast, then dispatch at each gateway's model-arrival
-        down_delay = {}
-        for gw in gateways:
-            delay = 0.0
-            for hop in broadcast_path(gw):
-                dl = hop.uplink.downlink_time(mbytes)
-                ledger.record_down(hop.tier, mbytes, dl)
-                delay += dl
-            down_delay[gw.node_id] = delay
-        for (dev, gid), ns in zip(participants, num_steps):
-            ledger.record_down(0, mbytes)   # device model fetch (profile-timed)
-            scheduler.dispatch(dev, int(ns), version=t,
-                               at=round_start + down_delay[gid])
+                # -- downlink broadcast, then dispatch at each gateway's model-arrival
+                down_delay = {}
+                for gw in gateways:
+                    delay = 0.0
+                    for hop in broadcast_path(gw):
+                        dl = hop.uplink.downlink_time(mbytes)
+                        ledger.record_down(hop.tier, mbytes, dl)
+                        delay += dl
+                    down_delay[gw.node_id] = delay
+                for (dev, gid), ns in zip(participants, num_steps):
+                    ledger.record_down(0, mbytes)   # device model fetch (profile-timed)
+                    scheduler.dispatch(dev, int(ns), version=t,
+                                       at=round_start + down_delay[gid])
 
-        # -- local training for the whole cohort (vmap, one compile) --------
-        sel = jnp.asarray(np.array([d for d, _ in participants]))
-        keys = jax.vmap(jax.random.fold_in, (None, 0))(
-            base_key, jnp.arange(t * P, (t + 1) * P, dtype=jnp.uint32))
-        deltas, grads = batch_update(params, x[sel], y[sel], mask[sel],
-                                     jnp.asarray(num_steps), keys)
-        # the round context is the engine's view of the cohort: the fused
-        # engine flattens to (P, n) f32 matrices (cohort slicing is a single
-        # in-jit gather per tier node), the streamed engine runs one chunked
-        # column pass and keeps only (P, P) statistics — summaries then
-        # carry symbolic row-mix refs instead of full-width vectors
-        ctx = eng.begin_round(deltas, grads)
+                # -- local training for the whole cohort (vmap, one compile) --------
+                sel = jnp.asarray(np.array([d for d, _ in participants]))
+                keys = jax.vmap(jax.random.fold_in, (None, 0))(
+                    base_key, jnp.arange(t * P, (t + 1) * P, dtype=jnp.uint32))
+                with spans.span("client_update", participants=P):
+                    deltas, grads = batch_update(params, x[sel], y[sel],
+                                                 mask[sel],
+                                                 jnp.asarray(num_steps), keys)
+                # the round context is the engine's view of the cohort: the fused
+                # engine flattens to (P, n) f32 matrices (cohort slicing is a single
+                # in-jit gather per tier node), the streamed engine runs one chunked
+                # column pass and keeps only (P, P) statistics — summaries then
+                # carry symbolic row-mix refs instead of full-width vectors
+                with spans.span("begin_round", engine=eng.name):
+                    ctx = eng.begin_round(deltas, grads)
 
-        # -- event loop: device terminals, then multi-hop transfers ---------
-        # Contextual tiers run a gradient pre-pass: each gateway ships its
-        # cohort ĝ_g up first (n floats), the cloud assembles the global ĝ
-        # and broadcasts it back down, and only then do gateways solve and
-        # ship (ū_g, G_g, c_g).  Total uplink is identical to packing ĝ_g
-        # inside the summary — the pre-pass just reorders it — but every
-        # tier's c-term is now priced against the *global* ∇f estimate; a
-        # gateway cohort is a skewed sample of a non-IID fleet, and a solve
-        # against the skewed local ĝ misweights the whole cohort in a way
-        # the parent's γ rescale cannot repair.
-        gw_of = {d: g for d, g in participants}
-        idx_of = {d: i for i, (d, _) in enumerate(participants)}
-        use_prepass = (topology.depth >= 2 and not relay
-                       and tier_mode == "contextual"
-                       and cfg.gateway_grad == "global")
-        out_dev = {gw.node_id: sum(1 for _, g in participants
-                                   if g == gw.node_id) for gw in gateways}
-        interior = [n for tier in range(2, topology.depth + 1)
-                    for n in topology.tier_nodes(tier)]
-        out_grad = {n.node_id: len(n.children) for n in interior}
-        out_sum = {n.node_id: len(n.children) for n in interior}
-        recv_grad: Dict[int, list] = {n.node_id: [] for n in interior}
-        recv_sum: Dict[int, list] = {n.node_id: [] for n in interior}
-        node_ghat: Dict[int, Pytree] = {}
-        survivors: Dict[int, List[int]] = {gw.node_id: [] for gw in gateways}
-        gw_idxs: Dict[int, List[int]] = {}
-        meta: Dict[int, tuple] = {}          # event seq -> (kind, node, payload)
-        ghat_global = None
-        cloud_done = False
-        round_info: Dict[str, Any] = {}
+                # -- event loop: device terminals, then multi-hop transfers ---------
+                # Contextual tiers run a gradient pre-pass: each gateway ships its
+                # cohort ĝ_g up first (n floats), the cloud assembles the global ĝ
+                # and broadcasts it back down, and only then do gateways solve and
+                # ship (ū_g, G_g, c_g).  Total uplink is identical to packing ĝ_g
+                # inside the summary — the pre-pass just reorders it — but every
+                # tier's c-term is now priced against the *global* ∇f estimate; a
+                # gateway cohort is a skewed sample of a non-IID fleet, and a solve
+                # against the skewed local ĝ misweights the whole cohort in a way
+                # the parent's γ rescale cannot repair.
+                gw_of = {d: g for d, g in participants}
+                idx_of = {d: i for i, (d, _) in enumerate(participants)}
+                use_prepass = (topology.depth >= 2 and not relay
+                               and tier_mode == "contextual"
+                               and cfg.gateway_grad == "global")
+                out_dev = {gw.node_id: sum(1 for _, g in participants
+                                           if g == gw.node_id) for gw in gateways}
+                interior = [n for tier in range(2, topology.depth + 1)
+                            for n in topology.tier_nodes(tier)]
+                out_grad = {n.node_id: len(n.children) for n in interior}
+                out_sum = {n.node_id: len(n.children) for n in interior}
+                recv_grad: Dict[int, list] = {n.node_id: [] for n in interior}
+                recv_sum: Dict[int, list] = {n.node_id: [] for n in interior}
+                node_ghat: Dict[int, Pytree] = {}
+                survivors: Dict[int, List[int]] = {gw.node_id: [] for gw in gateways}
+                gw_idxs: Dict[int, List[int]] = {}
+                meta: Dict[int, tuple] = {}          # event seq -> (kind, node, payload)
+                ghat_global = None
+                cloud_done = False
+                round_info: Dict[str, Any] = {}
 
-        def send_up(kind, node, payload, nbytes):
-            parent = topology.nodes[node.parent]
-            dt = node.uplink.uplink_time(nbytes)
-            ledger.record_up(parent.tier, nbytes, dt)
-            evt = scheduler.schedule(dt, node.node_id, version=t)
-            meta[evt.seq] = (kind, node.node_id, payload)
+                def send_up(kind, node, payload, nbytes):
+                    parent = topology.nodes[node.parent]
+                    dt = node.uplink.uplink_time(nbytes)
+                    ledger.record_up(parent.tier, nbytes, dt)
+                    evt = scheduler.schedule(dt, node.node_id, version=t)
+                    meta[evt.seq] = (kind, node.node_id, payload)
 
-        def send_ghat_down(child_id, ghat):
-            child = topology.nodes[child_id]
-            nbytes = update_bytes(n_model)
-            dt = child.uplink.downlink_time(nbytes)
-            ledger.record_down(child.tier, nbytes, dt)
-            evt = scheduler.schedule(dt, child_id, version=t)
-            meta[evt.seq] = ("ghat", child_id, ghat)
+                def send_ghat_down(child_id, ghat):
+                    child = topology.nodes[child_id]
+                    nbytes = update_bytes(n_model)
+                    dt = child.uplink.downlink_time(nbytes)
+                    ledger.record_down(child.tier, nbytes, dt)
+                    evt = scheduler.schedule(dt, child_id, version=t)
+                    meta[evt.seq] = ("ghat", child_id, ghat)
 
-        def gone_up(nid, out_map, complete_fn):
-            """Subtree has nothing to report: release the parent's count."""
-            pid = topology.nodes[nid].parent
-            out_map[pid] -= 1
-            if out_map[pid] == 0:
-                complete_fn(pid)
+                def gone_up(nid, out_map, complete_fn):
+                    """Subtree has nothing to report: release the parent's count."""
+                    pid = topology.nodes[nid].parent
+                    out_map[pid] -= 1
+                    if out_map[pid] == 0:
+                        complete_fn(pid)
 
-        def gateway_done(gid):
-            node = topology.nodes[gid]
-            idxs = sorted(survivors[gid])    # stable participant order
-            gw_idxs[gid] = idxs
-            if node.parent is None:          # star: the cloud is the gateway
-                finish_cloud(list(idxs) if idxs else None)
-                return
-            if not idxs:
-                if use_prepass:
-                    gone_up(gid, out_grad, on_grad_complete)
-                gone_up(gid, out_sum, on_sum_complete)
-                return
-            if relay:
-                send_up("summary", node, list(idxs),
-                        len(idxs) * update_bytes(n_model))
-            elif use_prepass:
-                ghat_g = ctx.mean_grad(idxs)
-                send_up("grad", node, (ghat_g, len(idxs)),
-                        update_bytes(n_model))
-            else:   # no pre-pass: solve (or average) against the cohort's
-                    # own ĝ_g, which rides up inside the summary
-                s = _gateway_summary(gid, idxs, None)
-                if compressing:
-                    send_up("summary", node, *_compress_summary(s, gid))
-                else:
-                    send_up("summary", node, s,
-                            summary_bytes(len(idxs), n_model,
-                                          include_grad=True))
+                def gateway_done(gid):
+                    node = topology.nodes[gid]
+                    idxs = sorted(survivors[gid])    # stable participant order
+                    gw_idxs[gid] = idxs
+                    if node.parent is None:          # star: the cloud is the gateway
+                        finish_cloud(list(idxs) if idxs else None)
+                        return
+                    if not idxs:
+                        if use_prepass:
+                            gone_up(gid, out_grad, on_grad_complete)
+                        gone_up(gid, out_sum, on_sum_complete)
+                        return
+                    if relay:
+                        send_up("summary", node, list(idxs),
+                                len(idxs) * update_bytes(n_model))
+                    elif use_prepass:
+                        ghat_g = ctx.mean_grad(idxs)
+                        send_up("grad", node, (ghat_g, len(idxs)),
+                                update_bytes(n_model))
+                    else:   # no pre-pass: solve (or average) against the cohort's
+                            # own ĝ_g, which rides up inside the summary
+                        s = _gateway_summary(gid, idxs, None)
+                        if compressing:
+                            send_up("summary", node, *_compress_summary(s, gid))
+                        else:
+                            send_up("summary", node, s,
+                                    summary_bytes(len(idxs), n_model,
+                                                  include_grad=True))
 
-        def _gateway_summary(gid, idxs, solve_grad):
-            # §III-C at the gateway tier: a fan-in-sampled cohort prices the
-            # pool it was drawn from, exactly like contextual_expected flat
-            pool = len(topology.nodes[gid].children)
-            pool_scale = ((pool - 1) / max(len(idxs) - 1, 1)
-                          if cfg.fan_in is not None and cfg.fan_in < pool
-                          and tier_mode == "contextual" else 1.0)
-            out = ctx.gateway(idxs, solve_grad=solve_grad,
-                              pool_scale=pool_scale)
-            return GatewaySummary(
-                node_id=gid, num_updates=len(idxs),
-                member_ids=np.asarray([participants[i][0] for i in idxs],
-                                      np.int64),
-                G=out["G"], c=out["c"], alpha=out["alpha"],
-                u_bar=out["u_bar"], grad_est=out["ghat"], info=out["info"])
+                def _gateway_summary(gid, idxs, solve_grad):
+                    # §III-C at the gateway tier: a fan-in-sampled cohort prices the
+                    # pool it was drawn from, exactly like contextual_expected flat
+                    pool = len(topology.nodes[gid].children)
+                    pool_scale = ((pool - 1) / max(len(idxs) - 1, 1)
+                                  if cfg.fan_in is not None and cfg.fan_in < pool
+                                  and tier_mode == "contextual" else 1.0)
+                    with spans.span("gateway", node=gid, members=len(idxs)):
+                        out = ctx.gateway(idxs, solve_grad=solve_grad,
+                                          pool_scale=pool_scale)
+                    return GatewaySummary(
+                        node_id=gid, num_updates=len(idxs),
+                        member_ids=np.asarray([participants[i][0] for i in idxs],
+                                              np.int64),
+                        G=out["G"], c=out["c"], alpha=out["alpha"],
+                        u_bar=out["u_bar"], grad_est=out["ghat"], info=out["info"])
 
-        def _merge_summaries(nid, kids, solve_grad):
-            """Parent-tier merge over what actually arrived: the children's
-            ū refs become this node's members (mass-conserving Σγ=1 stage,
-            see ``hier.gateway.merge_summaries``); member vectors stack
-            inside the jit boundary (fused) or stay symbolic row-mixes
-            (streamed)."""
-            counts = np.asarray([s.num_updates for s in kids], np.float32)
-            out = ctx.merge([s.u_bar for s in kids],
-                            [s.grad_est for s in kids], counts,
-                            solve_grad=solve_grad)
-            return GatewaySummary(
-                node_id=nid, num_updates=int(counts.sum()),
-                member_ids=np.asarray([s.node_id for s in kids], np.int64),
-                G=out["G"], c=out["c"], alpha=out["alpha"],
-                u_bar=out["u_bar"], grad_est=out["ghat"], info=out["info"])
+                def _merge_summaries(nid, kids, solve_grad):
+                    """Parent-tier merge over what actually arrived: the children's
+                    ū refs become this node's members (mass-conserving Σγ=1 stage,
+                    see ``hier.gateway.merge_summaries``); member vectors stack
+                    inside the jit boundary (fused) or stay symbolic row-mixes
+                    (streamed)."""
+                    counts = np.asarray([s.num_updates for s in kids], np.float32)
+                    with spans.span("merge", node=nid, children=len(kids)):
+                        out = ctx.merge([s.u_bar for s in kids],
+                                        [s.grad_est for s in kids], counts,
+                                        solve_grad=solve_grad)
+                    return GatewaySummary(
+                        node_id=nid, num_updates=int(counts.sum()),
+                        member_ids=np.asarray([s.node_id for s in kids], np.int64),
+                        G=out["G"], c=out["c"], alpha=out["alpha"],
+                        u_bar=out["u_bar"], grad_est=out["ghat"], info=out["info"])
 
-        def _compress_summary(s, nid):
-            """EF-compress one summary's (ū, ĝ) for its uplink hop; returns
-            (payload, wire bytes).  The same per-round sketch seed is shared
-            by every node and both vectors, so sketched cross-terms compose
-            at the cloud; residual state is per (vector, node).  Under the
-            streamed engine this is where symbolic refs dense-ify: one
-            chunked combine per vector, right before the encode."""
-            comp_u, u_hat = ef.step(("u", nid), ctx.materialize(s.u_bar),
-                                    comp_u_c, seed=t)
-            comp_g, g_hat = ef.step(("g", nid), ctx.materialize(s.grad_est),
-                                    comp_g_c, seed=t)
-            decoded = dc_replace(s, u_bar=u_hat, grad_est=g_hat)
-            nbytes = compressed_summary_bytes(comp_u.nbytes + comp_g.nbytes)
-            return CompressedSummary(decoded, comp_u, comp_g), nbytes
+                def _compress_summary(s, nid):
+                    """EF-compress one summary's (ū, ĝ) for its uplink hop; returns
+                    (payload, wire bytes).  The same per-round sketch seed is shared
+                    by every node and both vectors, so sketched cross-terms compose
+                    at the cloud; residual state is per (vector, node).  Under the
+                    streamed engine this is where symbolic refs dense-ify: one
+                    chunked combine per vector, right before the encode."""
+                    comp_u, u_hat = ef.step(("u", nid), ctx.materialize(s.u_bar),
+                                            comp_u_c, seed=t)
+                    comp_g, g_hat = ef.step(("g", nid), ctx.materialize(s.grad_est),
+                                            comp_g_c, seed=t)
+                    decoded = dc_replace(s, u_bar=u_hat, grad_est=g_hat)
+                    nbytes = compressed_summary_bytes(comp_u.nbytes + comp_g.nbytes)
+                    return CompressedSummary(decoded, comp_u, comp_g), nbytes
 
-        def on_grad_complete(nid):
-            nonlocal ghat_global
-            node = topology.nodes[nid]
-            entries = recv_grad[nid]         # [(sender, ĝ ref, count)]
-            if not entries:
-                if node.parent is not None:
-                    gone_up(nid, out_grad, on_grad_complete)
-                return
-            counts = np.asarray([c for _, _, c in entries], np.float64)
-            ghat = ctx.compose_grads([g for _, g, _ in entries], counts)
-            if node.parent is None:          # cloud: broadcast the global ĝ
-                ghat_global = ghat
-                for sender, _, _ in entries:
-                    send_ghat_down(sender, ghat)
-            else:
-                send_up("grad", node, (ghat, int(counts.sum())),
-                        update_bytes(n_model))
-
-        def on_ghat(nid, ghat):
-            node = topology.nodes[nid]
-            node_ghat[nid] = ghat
-            if node.tier == 1:               # gateway: solve and ship
-                idxs = gw_idxs[nid]
-                send_up("summary", node, _gateway_summary(nid, idxs, ghat),
-                        summary_bytes(len(idxs), n_model))
-            else:                            # regional: fan the broadcast out
-                for sender, _, _ in recv_grad[nid]:
-                    send_ghat_down(sender, ghat)
-
-        def on_sum_complete(nid):
-            node = topology.nodes[nid]
-            kids = recv_sum[nid]
-            if node.parent is None:
-                if not kids:
-                    finish_cloud(None)
-                else:
-                    finish_cloud(sum(kids, []) if relay else kids)
-                return
-            if not kids:
-                gone_up(nid, out_sum, on_sum_complete)
-                return
-            if relay:
-                fwd = sum(kids, [])
-                send_up("summary", node, fwd,
-                        len(fwd) * update_bytes(n_model))
-            elif compressing:
-                # merge over what actually arrived (the decodes), then
-                # re-compress with this node's own error-feedback state
-                s = _merge_summaries(nid, [p.summary for p in kids],
-                                     node_ghat.get(nid))
-                send_up("summary", node, *_compress_summary(s, nid))
-            else:
-                s = _merge_summaries(nid, kids, node_ghat.get(nid))
-                send_up("summary", node, s,
-                        summary_bytes(len(kids), n_model,
-                                      include_grad=not use_prepass))
-
-        def finish_cloud(payload):
-            nonlocal cloud_done, round_info, params
-            if payload is None:              # every participant dropped out
-                result.rounds_skipped += 1
-            else:
-                delta, round_info = _cloud_stage(payload)
-                params = ctx.apply(params, delta)
-            cloud_done = True
-
-        def _cloud_stage(payload):
-            if isinstance(payload, list) and isinstance(
-                    payload[0], (int, np.integer)):
-                # raw updates (star / relay); a star cloud is the fleet's one
-                # gateway, so fan-in sampling prices its pool here too
-                pool = len(topology.nodes[topology.cloud_id].children)
-                scale = ((pool - 1) / max(len(payload) - 1, 1)
-                         if cfg.fan_in is not None and cfg.fan_in < pool
-                         and not relay and tier_mode == "contextual" else 1.0)
-                kind = ("fedavg" if cfg.aggregator == "hier_fedavg"
-                        else "raw")
-                return ctx.cloud_raw(payload, kind, solve_scale=scale)
-            if compressing:                      # compressed child summaries
-                csums = payload
-                summaries = [p.summary for p in csums]
-                counts = [s.num_updates for s in summaries]
-                # the P×P stage runs on the sketched cross-terms, corrected
-                # for sketch distortion inside payload_gram; the combine
-                # applies the decodes, so solve and step stay consistent
-                G2c2 = payload_gram(comp_u_c,
-                                    [p.comp_u for p in csums],
-                                    [p.comp_g for p in csums],
-                                    np.asarray(counts, np.float64))
-                ghat = ctx.compose_grads([s.grad_est for s in summaries],
-                                         counts)
-                # no blockdiag diagnostics: the K_g² Gram blocks stayed at
-                # the gateways — that is where the byte saving comes from
-                return ctx.cloud_combo([s.u_bar for s in summaries], counts,
-                                       ghat, kind="combo", override=G2c2)
-            summaries = payload              # top-tier child summaries
-            counts = [s.num_updates for s in summaries]
-            ghat = (ghat_global if ghat_global is not None else
-                    ctx.compose_grads([s.grad_est for s in summaries],
-                                      counts))
-            delta, info = ctx.cloud_combo([s.u_bar for s in summaries],
-                                          counts, ghat, kind=cloud_kind)
-            info = dict(info)
-            info.update(blockdiag_diagnostics(summaries, info["gamma"],
-                                              cfg.smoothness))
-            return delta, info
-
-        max_events = 8 * (P + len(topology.nodes)) + 64
-        for _ in range(max_events):
-            if cloud_done:
-                break
-            evt = scheduler.pop()
-            if evt is None:
-                raise RuntimeError(f"round {t}: event queue exhausted before "
-                                   "the cloud completed")
-            if evt.seq in meta:              # backhaul transfer arrival
-                kind, sender, payload = meta.pop(evt.seq)
-                if kind == "grad":
-                    pid = topology.nodes[sender].parent
-                    recv_grad[pid].append((sender,) + payload)
-                    out_grad[pid] -= 1
-                    if out_grad[pid] == 0:
-                        on_grad_complete(pid)
-                elif kind == "ghat":
-                    on_ghat(sender, payload)
-                else:                        # summary
-                    pid = topology.nodes[sender].parent
-                    recv_sum[pid].append(payload)
-                    out_sum[pid] -= 1
-                    if out_sum[pid] == 0:
-                        on_sum_complete(pid)
-            else:                            # device terminal event
-                gid = gw_of[evt.device_id]
-                if evt.kind == EventKind.ARRIVAL:
-                    survivors[gid].append(idx_of[evt.device_id])
-                    result.arrived += 1
-                    if compressing and compress_devices:
-                        # per-device error feedback: the residual of every
-                        # round a device DID report persists on-device.
-                        # BOTH streams compress — the solves downstream
-                        # consume the gradient too, so an upload that only
-                        # shipped the update would be under-priced.  The
-                        # decoded rows enter the round context as ONE
-                        # gathered array update per cohort (fused engine;
-                        # the streamed engine defers to it for this config).
-                        i = idx_of[evt.device_id]
-                        comp_d, vhat = ef.step(
-                            ("dev", evt.device_id), ctx.D[i], comp_u_c,
-                            seed=t)
-                        comp_dg, ghat = ef.step(
-                            ("devg", evt.device_id), ctx.GM[i], comp_g_c,
-                            seed=t)
-                        ctx.add_decoded_row(i, vhat, ghat)
-                        ledger.record_up(topology.nodes[gid].tier,
-                                         comp_d.nbytes + comp_dg.nbytes)
+                def on_grad_complete(nid):
+                    nonlocal ghat_global
+                    node = topology.nodes[nid]
+                    entries = recv_grad[nid]         # [(sender, ĝ ref, count)]
+                    if not entries:
+                        if node.parent is not None:
+                            gone_up(nid, out_grad, on_grad_complete)
+                        return
+                    counts = np.asarray([c for _, _, c in entries], np.float64)
+                    ghat = ctx.compose_grads([g for _, g, _ in entries], counts)
+                    if node.parent is None:          # cloud: broadcast the global ĝ
+                        ghat_global = ghat
+                        for sender, _, _ in entries:
+                            send_ghat_down(sender, ghat)
                     else:
-                        ledger.record_up(topology.nodes[gid].tier,
-                                         update_bytes(n_model))
-                else:
-                    result.dropped += 1
-                out_dev[gid] -= 1
-                if out_dev[gid] == 0:
-                    gateway_done(gid)
-        if not cloud_done:
-            raise RuntimeError(f"round {t}: exceeded {max_events} events")
-        result.dispatched += P
-        round_walls.append(time.perf_counter() - round_t0)
+                        send_up("grad", node, (ghat, int(counts.sum())),
+                                update_bytes(n_model))
 
-        if collect_gamma and "gamma" in round_info:
-            _history_push(result.gamma_history,
-                          np.asarray(round_info["gamma"]), record_history)
-        event: Dict[str, Any] = {}
-        if tr.active:
-            event = {"round": t, "t_virtual": scheduler.now,
-                     "round_virtual_s": scheduler.now - round_start,
-                     "round_wall_s": round_walls[-1], "participants": P,
-                     "rounds_skipped": result.rounds_skipped}
-            if "gamma" in round_info:
-                event.update(_vec_stats("gamma", round_info["gamma"]))
-        if (t + 1) % eval_every == 0 or t == num_rounds - 1:
-            loss = global_train_loss(loss_fn, params, x, y, mask)
-            nll, acc = evaluate_classifier(apply_fn, params, test_x, test_y)
-            result.times.append(scheduler.now)
-            result.train_loss.append(loss)
-            result.test_acc.append(acc)
-            result.test_nll.append(nll)
-            if tr.active:
-                event.update(train_loss=loss, test_acc=acc, test_nll=nll)
-        if tr.active:
-            tr.log(event, step=t)
+                def on_ghat(nid, ghat):
+                    node = topology.nodes[nid]
+                    node_ghat[nid] = ghat
+                    if node.tier == 1:               # gateway: solve and ship
+                        idxs = gw_idxs[nid]
+                        send_up("summary", node, _gateway_summary(nid, idxs, ghat),
+                                summary_bytes(len(idxs), n_model))
+                    else:                            # regional: fan the broadcast out
+                        for sender, _, _ in recv_grad[nid]:
+                            send_ghat_down(sender, ghat)
+
+                def on_sum_complete(nid):
+                    node = topology.nodes[nid]
+                    kids = recv_sum[nid]
+                    if node.parent is None:
+                        if not kids:
+                            finish_cloud(None)
+                        else:
+                            finish_cloud(sum(kids, []) if relay else kids)
+                        return
+                    if not kids:
+                        gone_up(nid, out_sum, on_sum_complete)
+                        return
+                    if relay:
+                        fwd = sum(kids, [])
+                        send_up("summary", node, fwd,
+                                len(fwd) * update_bytes(n_model))
+                    elif compressing:
+                        # merge over what actually arrived (the decodes), then
+                        # re-compress with this node's own error-feedback state
+                        s = _merge_summaries(nid, [p.summary for p in kids],
+                                             node_ghat.get(nid))
+                        send_up("summary", node, *_compress_summary(s, nid))
+                    else:
+                        s = _merge_summaries(nid, kids, node_ghat.get(nid))
+                        send_up("summary", node, s,
+                                summary_bytes(len(kids), n_model,
+                                              include_grad=not use_prepass))
+
+                def finish_cloud(payload):
+                    nonlocal cloud_done, round_info, params
+                    if payload is None:              # every participant dropped out
+                        result.rounds_skipped += 1
+                    else:
+                        with spans.span("cloud"):
+                            delta, round_info = _cloud_stage(payload)
+                            params = ctx.apply(params, delta)
+                    cloud_done = True
+
+                def _cloud_stage(payload):
+                    if isinstance(payload, list) and isinstance(
+                            payload[0], (int, np.integer)):
+                        # raw updates (star / relay); a star cloud is the fleet's one
+                        # gateway, so fan-in sampling prices its pool here too
+                        pool = len(topology.nodes[topology.cloud_id].children)
+                        scale = ((pool - 1) / max(len(payload) - 1, 1)
+                                 if cfg.fan_in is not None and cfg.fan_in < pool
+                                 and not relay and tier_mode == "contextual" else 1.0)
+                        kind = ("fedavg" if cfg.aggregator == "hier_fedavg"
+                                else "raw")
+                        return ctx.cloud_raw(payload, kind, solve_scale=scale)
+                    if compressing:                      # compressed child summaries
+                        csums = payload
+                        summaries = [p.summary for p in csums]
+                        counts = [s.num_updates for s in summaries]
+                        # the P×P stage runs on the sketched cross-terms, corrected
+                        # for sketch distortion inside payload_gram; the combine
+                        # applies the decodes, so solve and step stay consistent
+                        G2c2 = payload_gram(comp_u_c,
+                                            [p.comp_u for p in csums],
+                                            [p.comp_g for p in csums],
+                                            np.asarray(counts, np.float64))
+                        ghat = ctx.compose_grads([s.grad_est for s in summaries],
+                                                 counts)
+                        # no blockdiag diagnostics: the K_g² Gram blocks stayed at
+                        # the gateways — that is where the byte saving comes from
+                        return ctx.cloud_combo([s.u_bar for s in summaries], counts,
+                                               ghat, kind="combo", override=G2c2)
+                    summaries = payload              # top-tier child summaries
+                    counts = [s.num_updates for s in summaries]
+                    ghat = (ghat_global if ghat_global is not None else
+                            ctx.compose_grads([s.grad_est for s in summaries],
+                                              counts))
+                    delta, info = ctx.cloud_combo([s.u_bar for s in summaries],
+                                                  counts, ghat, kind=cloud_kind)
+                    info = dict(info)
+                    info.update(blockdiag_diagnostics(summaries, info["gamma"],
+                                                      cfg.smoothness))
+                    return delta, info
+
+                max_events = 8 * (P + len(topology.nodes)) + 64
+                with spans.span("event_loop"):
+                    for _ in range(max_events):
+                        if cloud_done:
+                            break
+                        evt = scheduler.pop()
+                        if evt is None:
+                            raise RuntimeError(f"round {t}: event queue exhausted before "
+                                               "the cloud completed")
+                        if evt.seq in meta:              # backhaul transfer arrival
+                            kind, sender, payload = meta.pop(evt.seq)
+                            if kind == "grad":
+                                pid = topology.nodes[sender].parent
+                                recv_grad[pid].append((sender,) + payload)
+                                out_grad[pid] -= 1
+                                if out_grad[pid] == 0:
+                                    on_grad_complete(pid)
+                            elif kind == "ghat":
+                                on_ghat(sender, payload)
+                            else:                        # summary
+                                pid = topology.nodes[sender].parent
+                                recv_sum[pid].append(payload)
+                                out_sum[pid] -= 1
+                                if out_sum[pid] == 0:
+                                    on_sum_complete(pid)
+                        else:                            # device terminal event
+                            gid = gw_of[evt.device_id]
+                            if evt.kind == EventKind.ARRIVAL:
+                                survivors[gid].append(idx_of[evt.device_id])
+                                result.arrived += 1
+                                if compressing and compress_devices:
+                                    # per-device error feedback: the residual of every
+                                    # round a device DID report persists on-device.
+                                    # BOTH streams compress — the solves downstream
+                                    # consume the gradient too, so an upload that only
+                                    # shipped the update would be under-priced.  The
+                                    # decoded rows enter the round context as ONE
+                                    # gathered array update per cohort (fused engine;
+                                    # the streamed engine defers to it for this config).
+                                    i = idx_of[evt.device_id]
+                                    comp_d, vhat = ef.step(
+                                        ("dev", evt.device_id), ctx.D[i], comp_u_c,
+                                        seed=t)
+                                    comp_dg, ghat = ef.step(
+                                        ("devg", evt.device_id), ctx.GM[i], comp_g_c,
+                                        seed=t)
+                                    ctx.add_decoded_row(i, vhat, ghat)
+                                    ledger.record_up(topology.nodes[gid].tier,
+                                                     comp_d.nbytes + comp_dg.nbytes)
+                                else:
+                                    ledger.record_up(topology.nodes[gid].tier,
+                                                     update_bytes(n_model))
+                            else:
+                                result.dropped += 1
+                            out_dev[gid] -= 1
+                            if out_dev[gid] == 0:
+                                gateway_done(gid)
+                if not cloud_done:
+                    raise RuntimeError(f"round {t}: exceeded {max_events} events")
+                result.dispatched += P
+                round_walls.append(time.perf_counter() - round_t0)
+
+                if collect_gamma and "gamma" in round_info:
+                    _history_push(result.gamma_history,
+                                  np.asarray(round_info["gamma"]), record_history)
+                event: Dict[str, Any] = {}
+                if tr.active:
+                    event = {"round": t, "t_virtual": scheduler.now,
+                             "round_virtual_s": scheduler.now - round_start,
+                             "round_wall_s": round_walls[-1], "participants": P,
+                             "rounds_skipped": result.rounds_skipped}
+                    if "gamma" in round_info:
+                        event.update(_vec_stats("gamma", round_info["gamma"]))
+                if (t + 1) % eval_every == 0 or t == num_rounds - 1:
+                    with spans.span("eval"):
+                        loss = global_train_loss(loss_fn, params, x, y, mask)
+                        nll, acc = evaluate_classifier(apply_fn, params,
+                                                       test_x, test_y)
+                    result.times.append(scheduler.now)
+                    result.train_loss.append(loss)
+                    result.test_acc.append(acc)
+                    result.test_nll.append(nll)
+                    if tr.active:
+                        event.update(train_loss=loss, test_acc=acc, test_nll=nll)
+                if tr.active:
+                    tr.log(event, step=t)
     result.wall_time = time.time() - t0
     result.comm = ledger.report()
     result.cloud_uplink_bytes = ledger.cloud_uplink_bytes

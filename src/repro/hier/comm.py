@@ -20,7 +20,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, Optional
 
 from ..core.flatten import tree_size
-from ..obs import Tracker
+from ..obs import Tracker, record_span
 
 FLOAT_BYTES = 4.0
 
@@ -78,8 +78,10 @@ class CommLedger:
     direction, bytes, link seconds and (when a ``clock`` callable is given,
     normally the event scheduler's ``lambda: scheduler.now``) the virtual
     timestamp — so long runs expose their traffic live instead of only in
-    the end-of-run :meth:`report`.  A noop/absent tracker costs one
-    attribute check per record.
+    the end-of-run :meth:`report`.  Timed transfers additionally emit a
+    virtual-time ``link/up``/``link/down`` span (``repro.obs.spans``) so
+    link occupancy shows on the Perfetto virtual track.  A noop/absent
+    tracker costs one attribute check per record.
     """
 
     def __init__(self, depth: int, tracker: Optional[Tracker] = None,
@@ -95,7 +97,14 @@ class CommLedger:
         event = {"tier": tier, "dir": direction, "bytes": nbytes,
                  "link_seconds": seconds}
         if self._clock is not None:
-            event["t_virtual"] = self._clock()
+            now = self._clock()
+            event["t_virtual"] = now
+            if seconds > 0:
+                # the transfer's whole virtual interval is known at record
+                # time: emit it as one span so link occupancy lands on the
+                # virtual track next to the round/stage spans
+                record_span(f"link/{direction}", t0_virtual=now,
+                            dur_virtual_s=seconds, tier=tier, bytes=nbytes)
         self._tracker.log(event)
 
     def record_up(self, tier: int, nbytes: float, seconds: float = 0.0) -> None:

@@ -41,7 +41,7 @@ from ..core.solve import (SolveConfig, bound_value, solve_alpha,
                           theorem1_reduction)
 from ..core.gram import gram_residual
 from ..kernels.registry import select_impl_for
-from ..obs import current_tracker
+from ..obs import current_tracker, spans
 
 Pytree = Any
 
@@ -127,6 +127,30 @@ def _log_stage_build(kind: str, K: int, n: int, backend: str) -> None:
                                     "gram_backend": backend})
 
 
+def _traced_stage(kind: str, K: int, n: int, backend: str,
+                  stage: Callable) -> Callable:
+    """Wrap a freshly built stage so every invocation is a span: the FIRST
+    call (which pays the jit trace+compile synchronously) emits
+    ``stage_<kind>_compile``, steady-state calls emit ``stage_<kind>`` —
+    separate span paths, so ``trace_diff`` attributes compile cost apart
+    from dispatch cost.  Cached per compiled stage (the wrapper IS the
+    cache entry), and with the noop tracker the cost is one ``active``
+    check per call."""
+    first = [True]
+
+    def traced(*args, **kw):
+        tr = current_tracker()
+        if not tr.active:
+            first[0] = False           # compile happened untracked
+            return stage(*args, **kw)
+        name = f"stage_{kind}_compile" if first[0] else f"stage_{kind}"
+        first[0] = False
+        with spans.span(name, K=K, n=n, backend=backend):
+            return stage(*args, **kw)
+
+    return traced
+
+
 def _scoped(U: jax.Array, g: jax.Array, idx) -> Tuple[jax.Array, jax.Array]:
     return (U, g) if idx is None else (U[:, idx], g[idx])
 
@@ -204,6 +228,7 @@ def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
         def stage(U, GR, counts, g=None):
             return body(U, GR, counts, g)
 
+    stage = _traced_stage("summary", K, n, gram_impl.backend, stage)
     _STAGES[key] = stage
     return stage
 
@@ -275,6 +300,7 @@ def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
         def stage(U, ghat, counts, override=None):
             return body(U, ghat, counts, override)
 
+    stage = _traced_stage("cloud", P, n, gram_impl.backend, stage)
     _STAGES[key] = stage
     return stage
 

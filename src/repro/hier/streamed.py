@@ -55,7 +55,7 @@ import numpy as np
 from ..core.flatten import ChunkedFlatView, mix_rows
 from ..core.solve import SolveConfig, bound_value, solve_alpha
 from ..kernels.registry import force_backend, select_impl_for
-from ..obs import current_tracker
+from ..obs import current_tracker, spans
 from . import fused as _fused
 
 Pytree = Any
@@ -410,9 +410,14 @@ class StreamedRoundEngine:
                 slabs_key.append((P, s.width, str(s.matrix.dtype)))
             accumulate = _accum_for(P, tuple(slabs_key), self.chunk,
                                     tuple(impls))
-            G, C = accumulate(tuple(s.matrix for s in scoped),
-                              tuple(gview.slabs[s.index].matrix
-                                    for s in scoped))
+            # the chunked column pass: the streamed engine's per-round hot
+            # spot (walks every chunk of every slab under one jit call)
+            n_chunks = sum(-(-s.width // self.chunk) for s in scoped)
+            with spans.span("stream_accumulate", P=P, chunks=n_chunks,
+                            chunk_cols=self.chunk, slabs=len(scoped)):
+                G, C = accumulate(tuple(s.matrix for s in scoped),
+                                  tuple(gview.slabs[s.index].matrix
+                                        for s in scoped))
         else:                       # scope matched nothing: degenerate zeros
             G = C = jnp.zeros((P, P), jnp.float32)
         tr = current_tracker()
@@ -558,12 +563,14 @@ class StreamedRoundContext:
         if not _is_mix(ref):
             return ref
         view = self._dview if ref.src == "delta" else self._gview
-        return _materialize_mix(tuple(s.matrix for s in view.slabs),
-                                jnp.asarray(ref.w, jnp.float32))
+        with spans.span("stream_materialize", src=ref.src, P=self.P):
+            return _materialize_mix(tuple(s.matrix for s in view.slabs),
+                                    jnp.asarray(ref.w, jnp.float32))
 
     def apply(self, params: Pytree, delta_ref) -> Pytree:
         if not _is_mix(delta_ref):
             return _fused.apply_delta(params, delta_ref)
-        return _apply_mix(params, self._deltas,
-                          jnp.asarray(delta_ref.w, jnp.float32),
-                          self.engine.donate_params)
+        with spans.span("stream_apply", P=self.P):
+            return _apply_mix(params, self._deltas,
+                              jnp.asarray(delta_ref.w, jnp.float32),
+                              self.engine.donate_params)

@@ -47,7 +47,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from ..obs import current_tracker
+from ..obs import current_tracker, spans
 
 # preference order used when timing is impossible (tracer args, no cache)
 _STATIC_ORDER = ("pallas", "xla", "ref")
@@ -219,11 +219,20 @@ def _autotune(op: str, bucket: Tuple, args: Tuple, kw: Dict) -> AutotuneEntry:
                            f"(registered: {backends(op)})")
     entry = AutotuneEntry(op=op, bucket=bucket, backend=cands[0].backend)
     if len(cands) > 1:
-        for impl in cands:
-            try:
-                entry.timings_us[impl.backend] = _time_impl(impl, args, kw)
-            except Exception:           # a candidate that crashes never wins
-                continue
+        # one parent span per bucket resolution; each candidate timing
+        # (compile warm-up + timed reps) is a child span so the autotune
+        # cost inside a round's first stage is attributable per backend
+        with spans.span("autotune", op=op, bucket=repr(bucket)):
+            for impl in cands:
+                try:
+                    with spans.span("candidate", op=op,
+                                    backend=impl.backend) as h:
+                        us = _time_impl(impl, args, kw)
+                        if h is not None:
+                            h.tags["us_per_call"] = us
+                    entry.timings_us[impl.backend] = us
+                except Exception:       # a candidate that crashes never wins
+                    continue
         if entry.timings_us:
             entry.backend = min(entry.timings_us, key=entry.timings_us.get)
     _CACHE[(op, bucket)] = entry

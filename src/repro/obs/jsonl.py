@@ -16,16 +16,20 @@ tailed::
 
     tail -f BENCH_hier.jsonl | python -m json.tool --json-lines
 
-:func:`read_trace` parses a stream back into :class:`TrackedEvent`s;
-``tests/test_obs.py`` pins the write → parse → same-metrics round trip.
-The parser intentionally lives next to the writer, but the *bench* JSON
-derivation (records → ``BENCH_*.json``) is stdlib-only and lives in
-``benchmarks/bench_trace.py`` so CI scripts can run it without jax.
+:func:`iter_trace` parses a stream back into :class:`TrackedEvent`s one at
+a time — a generator, so trace tools (``summarize_trace.py``,
+``trace_diff.py``, the Perfetto export) never hold a long trace in memory;
+:func:`read_trace` is the list-materializing shim for call sites that want
+random access.  ``tests/test_obs.py`` pins the write → parse →
+same-metrics round trip.  The parser intentionally lives next to the
+writer, but the *bench* JSON derivation (records → ``BENCH_*.json``) is
+stdlib-only and lives in ``benchmarks/bench_trace.py`` so CI scripts can
+run it without jax.
 """
 from __future__ import annotations
 
 import json
-from typing import IO, Dict, List, Optional, Union
+from typing import IO, Dict, Iterator, List, Optional, Union
 
 import numpy as np
 
@@ -45,11 +49,17 @@ class JsonlTracker(Tracker):
     """Streams every event to an append-only ``.jsonl`` file.
 
     ``path`` may be a filename (truncated unless ``append=True``) or an open
-    text handle (left open on ``finish``).  Every write is flushed — the
-    point is a live, tailable stream, not write throughput.
+    text handle (left open on ``finish``).  ``flush_every`` batches flushes:
+    the default 1 flushes per write — a live, tailable stream — while hot
+    benches can raise it to amortize syscalls (``finish()`` always flushes
+    whatever is pending, and ``use_tracker`` calls it even when the body
+    raises, so no tail of the trace is lost either way).
     """
 
-    def __init__(self, path: Union[str, IO[str]], *, append: bool = False):
+    def __init__(self, path: Union[str, IO[str]], *, append: bool = False,
+                 flush_every: int = 1):
+        if flush_every < 1:
+            raise ValueError(f"flush_every must be >= 1, got {flush_every}")
         if hasattr(path, "write"):
             self._fh: IO[str] = path          # type: ignore[assignment]
             self._owns = False
@@ -57,6 +67,8 @@ class JsonlTracker(Tracker):
             self._fh = open(path, "a" if append else "w")
             self._owns = True
         self._last_step: Dict[str, int] = {}
+        self._flush_every = int(flush_every)
+        self._pending = 0
 
     def _record(self, event: TrackedEvent) -> None:
         last = self._last_step.get(event.scope, 0)
@@ -69,30 +81,45 @@ class JsonlTracker(Tracker):
         line = {"step": last, "t_wall": event.t_wall, "kind": event.kind,
                 "scope": event.scope, "metrics": event.metrics}
         self._fh.write(json.dumps(line, default=_jsonable) + "\n")
-        self._fh.flush()
+        self._pending += 1
+        if self._pending >= self._flush_every:
+            self._fh.flush()
+            self._pending = 0
 
     def finish(self) -> None:
-        if self._owns and not self._fh.closed:
-            self._fh.close()
+        if not self._fh.closed:
+            self._fh.flush()
+            self._pending = 0
+            if self._owns:
+                self._fh.close()
 
 
-def read_trace(path: Union[str, IO[str]],
-               kind: Optional[str] = None) -> List[TrackedEvent]:
-    """Parse a jsonl trace back into events (optionally one ``kind`` only).
-    """
-    if hasattr(path, "read"):
-        lines = path.read().splitlines()
-    else:
-        with open(path) as f:
-            lines = f.read().splitlines()
-    events = []
-    for line in lines:
+def _iter_handle(fh: IO[str], kind: Optional[str]
+                 ) -> Iterator[TrackedEvent]:
+    for line in fh:
         if not line.strip():
             continue
         obj = json.loads(line)
         if kind is not None and obj["kind"] != kind:
             continue
-        events.append(TrackedEvent(kind=obj["kind"], metrics=obj["metrics"],
-                                   step=obj["step"], t_wall=obj["t_wall"],
-                                   scope=obj.get("scope", "")))
-    return events
+        yield TrackedEvent(kind=obj["kind"], metrics=obj["metrics"],
+                           step=obj["step"], t_wall=obj["t_wall"],
+                           scope=obj.get("scope", ""))
+
+
+def iter_trace(path: Union[str, IO[str]],
+               kind: Optional[str] = None) -> Iterator[TrackedEvent]:
+    """Parse a jsonl trace lazily, one :class:`TrackedEvent` at a time
+    (optionally one ``kind`` only) — long traces never materialize."""
+    if hasattr(path, "read"):
+        yield from _iter_handle(path, kind)
+    else:
+        with open(path) as f:
+            yield from _iter_handle(f, kind)
+
+
+def read_trace(path: Union[str, IO[str]],
+               kind: Optional[str] = None) -> List[TrackedEvent]:
+    """List-materializing shim over :func:`iter_trace` for call sites that
+    need random access or multiple passes."""
+    return list(iter_trace(path, kind))

@@ -46,7 +46,7 @@ class TrackedEvent:
     ``a/b`` prefix path the event was logged under ("" at the root) — the
     jsonl tracker enforces step monotonicity per scope, since one trace
     typically interleaves several independent runs."""
-    kind: str                     # "metrics" | "summary" | "tags"
+    kind: str                     # "metrics" | "summary" | "tags" | "span"
     metrics: Metrics
     step: Optional[int] = None
     t_wall: float = 0.0
@@ -77,6 +77,12 @@ class Tracker:
         """Sticky tags (run name, engine, platform): one 'tags' event."""
         self._record(TrackedEvent("tags", dict(tags), None, time.time()))
 
+    def log_span(self, metrics: Metrics) -> None:
+        """One closed span (``repro.obs.spans``): dual-clock interval plus
+        tags, already flattened to JSON-ready fields.  Routed through
+        ``_record`` like everything else, so every sink carries spans."""
+        self._record(TrackedEvent("span", dict(metrics), None, time.time()))
+
     def scope(self, prefix: str) -> "Tracker":
         """A view of this tracker whose metric keys are prefixed
         ``"{prefix}/"`` — compose freely: ``tr.scope("hier").scope("gw3")``.
@@ -105,6 +111,9 @@ class NoopTracker(Tracker):
         pass
 
     def jot(self, **tags: Any) -> None:
+        pass
+
+    def log_span(self, metrics: Metrics) -> None:
         pass
 
     def scope(self, prefix: str) -> "Tracker":
@@ -147,6 +156,9 @@ class InMemoryTracker(Tracker):
 
     def metrics_events(self) -> List[TrackedEvent]:
         return [e for e in self.events if e.kind == "metrics"]
+
+    def span_events(self) -> List[TrackedEvent]:
+        return [e for e in self.events if e.kind == "span"]
 
     def series(self, key: str) -> List[Any]:
         """All values logged under ``key`` (any kind), in event order."""

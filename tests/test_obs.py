@@ -21,7 +21,9 @@ from repro.fl import (ServerConfig, run_async_simulation, run_hier_simulation,
 from repro.hier import HierConfig, two_tier_topology
 from repro.models.logistic import logistic_apply, logistic_loss
 from repro.obs import (NOOP, CompositeTracker, InMemoryTracker, JsonlTracker,
-                       NoopTracker, current_tracker, read_trace, use_tracker)
+                       NoopTracker, current_tracker, iter_trace, read_trace,
+                       spans, use_tracker, use_virtual_clock)
+from repro.obs.spans import span_fields, span_tags
 
 import repro.edge.async_server  # noqa: F401  (registers async aggregators)
 import repro.hier.hier_server  # noqa: F401  (registers hier aggregators)
@@ -116,6 +118,131 @@ def test_jsonl_rejects_unserializable():
     tr = JsonlTracker(io.StringIO())
     with pytest.raises(TypeError, match="not JSON-serializable"):
         tr.log({"fn": lambda: None})
+
+
+def test_jsonl_flush_every_batches_and_finish_flushes(tmp_path):
+    path = str(tmp_path / "batched.jsonl")
+    tr = JsonlTracker(path, flush_every=100)
+    for i in range(3):
+        tr.log({"x": i}, step=i)
+    # nothing reached disk yet: flushes are batched
+    assert open(path).read() == ""
+    tr.finish()
+    assert [e.metrics["x"] for e in read_trace(path)] == [0, 1, 2]
+    with pytest.raises(ValueError, match="flush_every"):
+        JsonlTracker(str(tmp_path / "bad.jsonl"), flush_every=0)
+
+
+def test_use_tracker_finishes_jsonl_when_body_raises(tmp_path):
+    path = str(tmp_path / "crash.jsonl")
+    with pytest.raises(RuntimeError, match="boom"):
+        with use_tracker(JsonlTracker(path, flush_every=1000)) as tr:
+            tr.log({"x": 1}, step=0)
+            raise RuntimeError("boom")
+    # finish() ran on the way out: the pending tail reached disk
+    assert [e.metrics["x"] for e in read_trace(path)] == [1]
+
+
+def test_iter_trace_is_lazy_read_trace_materializes(tmp_path):
+    path = str(tmp_path / "lazy.jsonl")
+    with use_tracker(JsonlTracker(path)) as tr:
+        tr.log({"x": 1}, step=0)
+        tr.log_summary({"done": True})
+    it = iter_trace(path)
+    assert iter(it) is it                       # generator, not a list
+    assert next(it).metrics == {"x": 1}
+    assert [e.kind for e in read_trace(path)] == ["metrics", "summary"]
+    assert len(read_trace(path, kind="summary")) == 1
+
+
+# ---------------------------------------------------------------------------
+# spans: dual-clock intervals through the tracker protocol
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_paths_and_dual_clock():
+    mem = InMemoryTracker()
+    vt = [10.0]
+    with use_tracker(mem, finish=False), use_virtual_clock(lambda: vt[0]):
+        with spans.span("round", round=3):
+            with spans.span("solve", K=4) as h:
+                h.tags["extra"] = "yes"
+                vt[0] = 12.5
+    fields = [span_fields(e) for e in mem.span_events()]
+    assert [f["path"] for f in fields] == ["round/solve", "round"]
+    solve, rnd = fields
+    assert solve["depth"] == 1 and rnd["depth"] == 0
+    assert rnd["t0_virtual"] == 10.0
+    assert rnd["dur_virtual_s"] == pytest.approx(2.5)
+    assert solve["dur_wall_s"] >= 0
+    assert span_tags(solve) == {"K": 4, "extra": "yes"}
+    assert span_tags(rnd) == {"round": 3}
+
+
+def test_span_error_path_closes_and_restores_depth():
+    mem = InMemoryTracker()
+    with use_tracker(mem, finish=False):
+        with pytest.raises(RuntimeError):
+            with spans.span("outer"):
+                with spans.span("inner"):
+                    raise RuntimeError("bang")
+        # depth restored: a fresh span is top-level again
+        with spans.span("after"):
+            pass
+    fields = [span_fields(e) for e in mem.span_events()]
+    assert [f["path"] for f in fields] == ["outer/inner", "outer", "after"]
+    assert fields[0]["error"] == "RuntimeError"
+    assert fields[1]["error"] == "RuntimeError"
+    assert "error" not in fields[2]
+    assert fields[2]["depth"] == 0
+
+
+def test_flat_spans_do_not_corrupt_nesting():
+    mem = InMemoryTracker()
+    with use_tracker(mem, finish=False):
+        with spans.span("round"):
+            h1 = spans.begin("task", t_virtual=1.0, device=7)
+            h2 = spans.begin("task", t_virtual=2.0, device=8)
+            with spans.span("solve"):       # nests under round, not task
+                pass
+            spans.end(h2, t_virtual=6.0, outcome="arrival")
+            spans.end(h1, t_virtual=9.0, outcome="dropout")
+    fields = [span_fields(e) for e in mem.span_events()]
+    by_path = [f["path"] for f in fields]
+    assert by_path == ["round/solve", "round/task", "round/task", "round"]
+    tasks = [f for f in fields if f["name"] == "task"]
+    assert all(f["flat"] for f in tasks)
+    assert {f["outcome"] for f in tasks} == {"arrival", "dropout"}
+    assert sorted(f["dur_virtual_s"] for f in tasks) == [4.0, 8.0]
+
+
+def test_spans_are_free_on_the_noop_path():
+    assert current_tracker() is NOOP
+    with spans.span("x") as h:
+        assert h is None
+    assert spans.begin("y") is None
+    spans.end(None, outcome="ignored")          # no-op, no error
+    spans.record_span("z", t0_virtual=0.0, dur_virtual_s=1.0)
+    assert spans.current_path() == ""
+
+
+def test_record_span_emits_known_virtual_interval():
+    mem = InMemoryTracker()
+    with use_tracker(mem, finish=False):
+        spans.record_span("link/up", t0_virtual=5.0, dur_virtual_s=0.25,
+                          tier=2, bytes=1024.0)
+    (f,) = [span_fields(e) for e in mem.span_events()]
+    assert f["t0_virtual"] == 5.0 and f["dur_virtual_s"] == 0.25
+    assert f["dur_wall_s"] == 0.0 and f["flat"]
+    assert span_tags(f) == {"tier": 2, "bytes": 1024.0}
+
+
+def test_span_reserved_keys_match_stdlib_mirror():
+    sys.path.insert(0, "benchmarks")
+    try:
+        import bench_trace
+    finally:
+        sys.path.pop(0)
+    assert tuple(bench_trace.SPAN_RESERVED) == tuple(spans.RESERVED_KEYS)
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +367,88 @@ def test_hier_sim_streams_comm_ledger_and_engine(tiny):
     assert summary.metrics["hier/t/engine_name"] == "fused"
     assert summary.metrics["hier/t/cloud_uplink_bytes"] == \
         pytest.approx(r.cloud_uplink_bytes)
+
+
+def test_hier_sim_emits_nested_and_flat_spans(tiny):
+    ds, params = tiny
+    mem = InMemoryTracker()
+    with use_tracker(mem):
+        r = _hier(ds, params)
+    fields = [span_fields(e) for e in mem.span_events()]
+    paths = {f["path"] for f in fields}
+    # the whole round path shows up, nested
+    assert {"round", "round/client_update", "round/begin_round",
+            "round/event_loop"} <= paths
+    assert any(p.startswith("round/event_loop/gateway") for p in paths)
+    assert any(p.startswith("round/event_loop/cloud") for p in paths)
+    # round spans carry both clocks; virtual duration matches the scheduler
+    rounds = [f for f in fields if f["path"] == "round"]
+    assert len(rounds) == 4
+    assert [f["round"] for f in rounds] == [0, 1, 2, 3]
+    assert all(f["dur_virtual_s"] > 0 and f["dur_wall_s"] > 0
+               for f in rounds)
+    assert sum(f["dur_virtual_s"] for f in rounds) == \
+        pytest.approx(r.times[-1])
+    # engine stages trace under their tier node (the compile-vs-steady
+    # naming itself is unit-tested below — this process's stage cache may
+    # already be warm from earlier tests)
+    names = {f["name"] for f in fields}
+    assert any(n.startswith("stage_") for n in names)
+    # scheduler task lifetimes: flat, virtual-stamped, outcome-tagged
+    tasks = [f for f in fields if f["name"] == "sched/task"]
+    assert len(tasks) == r.dispatched
+    assert all(f["flat"] and f["t0_virtual"] >= 0 for f in tasks)
+    outcomes = {f["outcome"] for f in tasks}
+    assert outcomes <= {"arrival", "dropout"} and "arrival" in outcomes
+    # link transfers land as virtual-time spans with byte tags
+    links = [f for f in fields if f["name"].startswith("link/")]
+    assert links and all(f["dur_virtual_s"] > 0 and f["dur_wall_s"] == 0.0
+                         for f in links)
+    assert {f["name"] for f in links} == {"link/up", "link/down"}
+
+
+def test_async_sim_emits_spans_under_virtual_clock(tiny):
+    ds, params = tiny
+    cfg = AsyncConfig(aggregator="contextual_async",
+                      num_devices=ds.num_devices, buffer_size=3, lr=0.2,
+                      batch_size=10, min_epochs=1, max_epochs=4)
+    fleet = bimodal_fleet(ds.num_devices, slowdown=8.0, dropout_slow=0.2,
+                          seed=0)
+    mem = InMemoryTracker()
+    with use_tracker(mem):
+        run_async_simulation("t", logistic_loss, logistic_apply, params,
+                             ds, cfg, fleet, num_aggregations=4,
+                             selection_seed=11, eval_every=2)
+    fields = [span_fields(e) for e in mem.span_events()]
+    aggs = [f for f in fields if f["name"] == "aggregate"]
+    assert [f["flush"] for f in aggs] == [1, 2, 3, 4]
+    tv = [f["t0_virtual"] for f in aggs]
+    assert all(b >= a for a, b in zip(tv, tv[1:]))
+    assert all(f["name"] in ("client_update", "aggregate", "eval",
+                             "sched/task") for f in fields)
+    assert any(f["name"] == "client_update" and "staleness" in f
+               for f in fields)
+
+
+def test_traced_stage_splits_compile_from_steady_state():
+    from repro.hier.fused import _traced_stage
+    calls = []
+    stage = _traced_stage("summary", K=4, n=100, backend="xla",
+                          stage=lambda v: calls.append(v) or v * 2)
+    mem = InMemoryTracker()
+    with use_tracker(mem, finish=False):
+        assert stage(1) == 2 and stage(2) == 4 and stage(3) == 6
+    names = [span_fields(e)["name"] for e in mem.span_events()]
+    assert names == ["stage_summary_compile", "stage_summary",
+                     "stage_summary"]
+    assert calls == [1, 2, 3]
+    # an untracked first call still consumes the compile slot silently
+    stage2 = _traced_stage("cloud", K=2, n=10, backend="xla",
+                           stage=lambda v: v)
+    stage2(0)                                   # no tracker: no span, no cost
+    with use_tracker(mem, finish=False):
+        stage2(0)
+    assert span_fields(mem.span_events()[-1])["name"] == "stage_cloud"
 
 
 def test_instrumentation_does_not_perturb_results(tiny):

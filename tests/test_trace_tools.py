@@ -1,0 +1,171 @@
+"""Trace tooling: Perfetto export, trace_diff triage, summarize_trace CLI.
+
+These tools consume the span-bearing ``.jsonl`` traces (``repro.obs``) —
+the Perfetto exporter from the package, the stdlib-only diff/summarize
+CLIs from ``benchmarks/``.  Tests synthesize small traces through the real
+span API, then check the exported Chrome trace structure, the per-path
+diff alignment, and the hard-error contract on missing/empty/truncated
+traces.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.obs import JsonlTracker, spans, use_tracker, use_virtual_clock
+from repro.obs.perfetto import (VIRTUAL_PID, WALL_PID, export_chrome_trace,
+                                main as perfetto_main)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import summarize_trace  # noqa: E402
+import trace_diff  # noqa: E402
+
+
+def _write_trace(path, round_wall=0.0, extra_round=False):
+    """One tiny dual-clock trace: a round with a solve child, two flat
+    scheduler tasks, a link transfer — the full span menagerie."""
+    vt = [0.0]
+    with use_tracker(JsonlTracker(str(path))) as tr:
+        tr.jot(run="toy")
+        with use_virtual_clock(lambda: vt[0]):
+            rounds = 2 if extra_round else 1
+            for t in range(rounds):
+                with spans.span("round", round=t):
+                    h = spans.begin("sched/task", device=3)
+                    with spans.span("solve", K=4):
+                        vt[0] += 5.0
+                        if round_wall:
+                            import time
+                            time.sleep(round_wall)
+                    spans.end(h, outcome="arrival")
+                    spans.record_span("link/up", t0_virtual=vt[0],
+                                      dur_virtual_s=0.5, tier=1,
+                                      bytes=256.0)
+        tr.log_summary({"_bench_meta": {"benchmark": "toy", "rounds": rounds}})
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+# ---------------------------------------------------------------------------
+
+def test_perfetto_export_dual_track_structure(tmp_path):
+    trace = tmp_path / "BENCH_toy.jsonl"
+    out = tmp_path / "trace.json"
+    _write_trace(trace)
+    n = export_chrome_trace(str(trace), str(out))
+    assert n == 4                       # round, solve, sched/task, link/up
+    payload = json.loads(out.read_text())
+    evs = payload["traceEvents"]
+    # both clock tracks are named processes
+    names = {(e["pid"], e["args"]["name"]) for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert (WALL_PID, "wall clock") in names
+    assert any(pid == VIRTUAL_PID for pid, _ in names)
+    # nested spans are complete events on both tracks, flat ones async pairs
+    X = [e for e in evs if e["ph"] == "X"]
+    assert {e["pid"] for e in X} == {WALL_PID, VIRTUAL_PID}
+    assert {e["name"] for e in X if e["pid"] == WALL_PID} == \
+        {"round", "solve"}
+    b, e_ = [e for e in evs if e["ph"] == "b"], \
+        [e for e in evs if e["ph"] == "e"]
+    assert len(b) == len(e_) and {e["name"] for e in b} == \
+        {"sched/task", "link/up"}
+    assert {e["id"] for e in b} == {e["id"] for e in e_}
+    # wall timestamps are rebased to the trace start; virtual ones are the
+    # simulated seconds verbatim (µs)
+    assert min(e["ts"] for e in evs if e.get("pid") == WALL_PID
+               and e["ph"] == "X") == pytest.approx(0.0, abs=1e-3)
+    vround = [e for e in X if e["pid"] == VIRTUAL_PID
+              and e["name"] == "round"]
+    assert vround[0]["dur"] == pytest.approx(5.0 * 1e6)
+    # tags ride in args
+    solve = [e for e in X if e["name"] == "solve"][0]
+    assert solve["args"]["K"] == 4 and solve["args"]["path"] == "round/solve"
+
+
+def test_perfetto_cli_error_and_empty_paths(tmp_path, capsys):
+    assert perfetto_main([str(tmp_path / "nope.jsonl")]) == 2
+    assert "not found" in capsys.readouterr().err
+    # a trace with no spans exports fine but warns
+    empty = tmp_path / "nospans.jsonl"
+    with use_tracker(JsonlTracker(str(empty))) as tr:
+        tr.log({"x": 1}, step=0)
+    out = tmp_path / "o.json"
+    assert perfetto_main([str(empty), "-o", str(out)]) == 0
+    assert "no span events" in capsys.readouterr().err
+    assert json.loads(out.read_text())["traceEvents"]    # metadata only
+
+
+# ---------------------------------------------------------------------------
+# trace_diff
+# ---------------------------------------------------------------------------
+
+def test_trace_diff_aligns_paths_and_reports_deltas(tmp_path, capsys):
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    _write_trace(a)
+    _write_trace(b, round_wall=0.05, extra_round=True)
+    assert trace_diff.main([str(a), str(b)]) == 0
+    out = capsys.readouterr().out
+    assert "`round/solve`" in out and "`round`" in out
+    assert "1→2" in out                  # count alignment: one extra round
+    assert "total span wall" in out
+    # per-path aggregation: the slowed solve dominates the wall delta
+    base, new = trace_diff.collect(str(a)), trace_diff.collect(str(b))
+    assert new["round/solve"].wall_s - base["round/solve"].wall_s > 0.04
+    assert base["round/solve"].count == 1 and new["round/solve"].count == 2
+    # flat spans contribute virtual time but never wall time
+    assert base["round/sched/task"].wall_s == 0.0
+    assert base["round/sched/task"].virtual_s == pytest.approx(5.0)
+    assert base["round/link/up"].virtual_s == pytest.approx(0.5)
+
+
+def test_trace_diff_error_paths(tmp_path, capsys):
+    good = tmp_path / "g.jsonl"
+    _write_trace(good)
+    assert trace_diff.main([str(tmp_path / "nope.jsonl"), str(good)]) == 2
+    assert "no such trace" in capsys.readouterr().err
+    # spanless traces: nothing to diff, non-zero with a clear line
+    nospan = tmp_path / "n.jsonl"
+    with use_tracker(JsonlTracker(str(nospan))) as tr:
+        tr.log({"x": 1}, step=0)
+    assert trace_diff.main([str(nospan), str(nospan)]) == 1
+    assert "no spans" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# summarize_trace hard-error contract
+# ---------------------------------------------------------------------------
+
+def test_summarize_trace_renders_spans_and_payload(tmp_path, capsys):
+    trace = tmp_path / "BENCH_toy.jsonl"
+    _write_trace(trace)
+    assert summarize_trace.main([str(trace)]) == 0
+    out = capsys.readouterr().out
+    assert "### toy" in out and "rounds=3" not in out
+    assert "Slowest spans" in out and "`round/solve`" in out
+    # flat spans stay out of the wall-sorted triage table
+    assert "sched/task" not in out.split("Slowest spans")[1]
+
+
+def test_summarize_trace_fails_on_missing_empty_truncated(tmp_path, capsys):
+    missing = str(tmp_path / "nope.jsonl")
+    assert summarize_trace.main([missing]) == 1
+    assert "no such trace" in capsys.readouterr().err
+
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert summarize_trace.main([str(empty)]) == 1
+    assert "empty" in capsys.readouterr().err
+
+    good = tmp_path / "good.jsonl"
+    _write_trace(good)
+    truncated = tmp_path / "trunc.jsonl"
+    truncated.write_text(good.read_text()[:80])
+    assert summarize_trace.main([str(truncated)]) == 1
+    err = capsys.readouterr().err
+    assert "truncated or corrupt" in err and "line 1" in err
+
+    # one bad trace fails the whole invocation, good ones still render
+    assert summarize_trace.main([str(good), str(truncated)]) == 1
