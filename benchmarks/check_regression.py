@@ -39,7 +39,7 @@ from bench_trace import derive_bench_json  # noqa: E402
 # pick a different backend; the oracle_max_abs_err field is what gates
 # kernel correctness).
 IGNORE = ("round_time_s", "wall_time", "us_per_call", "time_end",
-          "selected", "candidates_timed")
+          "selected", "candidates_timed", "ungated")
 EXACT = ("bytes", "savings", "gateways", "devices", "rounds", "num_",
          "meets_")
 LOOSE_REL = 0.35        # losses / accs / virtual times across jax versions
@@ -48,7 +48,7 @@ EXACT_REL = 1e-6
 
 # numeric fields that are part of a record's identity, not metrics
 IDENTITY_NUM = ("ratio", "u_frac", "depth", "gateways", "fleet_slowdown",
-                "target_acc", "K", "n", "m", "k")
+                "target_acc", "K", "n", "m", "k", "frac")
 
 
 def _classify(key: str):

@@ -1,0 +1,193 @@
+"""Adversarial & churn robustness sweep: attack × malicious fraction × churn.
+
+Runs the 64-device acceptance fleet through the flat sync runtime under
+each attack model and through the two-tier hierarchical runtime under
+attack + churn waves, comparing the robust contextual solve
+(``contextual_mom`` — clipping + median-of-means pooling on the (G, c)
+cross-term slots) against the plain contextual solve, FedAvg, and the
+krum / coordinate-median baselines.
+
+The committed ``BENCH_robust.json`` carries an ``acceptance`` block — loss
+inflation (attacked final loss / that aggregator's own clean final loss) at
+20% Byzantine on the headline scenario — which the bench-regression CI gate
+checks: the robust solve stays within 10% of its clean run while plain
+contextual and FedAvg degrade markedly.  Clean-run losses are gated within
+the cross-platform band; attacked absolute losses ride along ``*_ungated``
+(attack noise is jax-version-sensitive; the inflation ratios and meets_*
+booleans are the stable signal).  Scheduler drop counts are deterministic
+accounting and gated near-exactly (``num_`` prefix).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.data import make_synthetic
+from repro.data.federated import FederatedDataset
+from repro.edge import uniform_fleet
+from repro.fl import ServerConfig, run_hier_simulation, run_simulation
+from repro.hier import HierConfig, two_tier_topology
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.models.logistic import logistic_apply, logistic_loss
+from repro.robust import (ByzantineGauss, LabelFlip, RobustConfig, SignFlip,
+                          assign_adversaries, churn_schedule)
+
+from .common import emit
+
+SEED = 42                 # client selection
+ADV_SEED = 3              # adversary placement
+DIM, N_DEV, N_GW = 20, 64, 4
+FRAC = 0.2                # headline malicious fraction
+ROBUST = RobustConfig(clip=2.0, pool="mom")
+ATTACKS = {               # label → model (param folded into the label so it
+    "byzantine_gauss@25": ByzantineGauss(scale=25.0),   # keys identity)
+    "sign_flip@2": SignFlip(factor=2.0),
+    "label_flip": LabelFlip(),
+}
+HEADLINE = "byzantine_gauss@25"
+
+
+def _setup():
+    xs, ys = make_synthetic(1.0, 1.0, num_devices=N_DEV,
+                            samples_per_device=30, dim=DIM, seed=5)
+    ds = FederatedDataset(xs, ys, np.ones(ys.shape, np.float32),
+                          xs.reshape(-1, DIM)[:400], ys.reshape(-1)[:400], 10)
+    params = get_model(ArchConfig(name="lr", family="logreg", input_dim=DIM,
+                                  num_classes=10)).init(jax.random.PRNGKey(0))
+    return ds, params
+
+
+def _flat(name, agg, ds, params, fleet, rounds, attack=None,
+          robust: Optional[RobustConfig] = None):
+    cfg = ServerConfig(aggregator=agg, num_devices=N_DEV,
+                       clients_per_round=16, lr=0.2, batch_size=10,
+                       min_epochs=1, max_epochs=4, attack=attack,
+                       malicious=fleet.malicious if attack else (),
+                       robust=robust)
+    return run_simulation(name, logistic_loss, logistic_apply, params, ds,
+                          cfg, num_rounds=rounds, selection_seed=SEED,
+                          eval_every=rounds)
+
+
+# (method, aggregator, robust config) — the comparison column
+_METHODS = (
+    ("contextual", "contextual", None),
+    ("contextual_mom", "contextual_mom", ROBUST),
+    ("fedavg", "fedavg", None),
+    ("krum", "krum", RobustConfig()),
+    ("coordinate_median", "coordinate_median", None),
+)
+
+
+def collect(rounds: int = 10) -> Dict:
+    ds, params = _setup()
+    fleet = assign_adversaries(uniform_fleet(N_DEV), FRAC, seed=ADV_SEED)
+    records = []
+
+    def rec(method, attack_label, frac, r, clean_loss=None, churn="none",
+            **extra):
+        row = {"method": method, "attack": attack_label, "frac": frac,
+               "churn": churn, **extra}
+        if attack_label == "none" and churn == "none":
+            row["final_loss"] = r.train_loss[-1]
+            row["final_acc"] = r.test_acc[-1]
+        else:           # attacked/churned numbers: volatile across backends
+            row["final_loss_ungated"] = r.train_loss[-1]
+            row["final_acc_ungated"] = r.test_acc[-1]
+            if clean_loss is not None:
+                row["inflation_ungated"] = r.train_loss[-1] / clean_loss
+        records.append(row)
+        return row
+
+    # -- flat: clean anchors, then the headline attack for every method ----
+    clean = {}
+    for method, agg, rob in _METHODS:
+        r = _flat(f"{method}-clean", agg, ds, params, fleet, rounds,
+                  robust=rob)
+        clean[method] = r.train_loss[-1]
+        rec(method, "none", 0.0, r)
+    attacked = {}
+    for method, agg, rob in _METHODS:
+        r = _flat(f"{method}-byz", agg, ds, params, fleet, rounds,
+                  attack=ATTACKS[HEADLINE], robust=rob)
+        attacked[method] = r.train_loss[-1]
+        rec(method, HEADLINE, FRAC, r, clean_loss=clean[method])
+
+    # -- flat: remaining attack types on plain vs robust contextual --------
+    for label in ("sign_flip@2", "label_flip"):
+        for method, agg, rob in _METHODS[:2]:
+            r = _flat(f"{method}-{label}", agg, ds, params, fleet, rounds,
+                      attack=ATTACKS[label], robust=rob)
+            rec(method, label, FRAC, r, clean_loss=clean[method])
+
+    # -- flat: malicious-fraction sweep on the robust solve ----------------
+    for frac in (0.1, 0.3):
+        fl_f = assign_adversaries(uniform_fleet(N_DEV), frac, seed=ADV_SEED)
+        r = _flat(f"mom-f{frac:g}", "contextual_mom", ds, params, fl_f,
+                  rounds, attack=ATTACKS[HEADLINE], robust=ROBUST)
+        rec("contextual_mom", HEADLINE, frac, r,
+            clean_loss=clean["contextual_mom"])
+
+    # -- hierarchical: robust tier solves under attack + churn waves -------
+    hcfg = HierConfig(aggregator="hier_contextual", lr=0.2, batch_size=10,
+                      min_epochs=1, max_epochs=4, robust=ROBUST)
+    topo = two_tier_topology(fleet, N_GW)
+
+    def hier(name, attack=None, churn=None):
+        return run_hier_simulation(name, logistic_loss, logistic_apply,
+                                   params, ds, hcfg, topo,
+                                   num_rounds=rounds, selection_seed=SEED,
+                                   eval_every=rounds, attack=attack,
+                                   churn=churn)
+
+    h_clean = hier("hier-mom-clean")
+    rec("hier_mom", "none", 0.0, h_clean, topology="two_tier",
+        num_dropped=h_clean.dropped, num_arrived=h_clean.arrived)
+    t_end = h_clean.times[-1]
+    for profile in ("none", "wave", "blackout"):
+        churn = None if profile == "none" else churn_schedule(
+            profile, N_DEV, t_end, seed=1)
+        r = hier(f"hier-mom-byz-{profile}", attack=ATTACKS[HEADLINE],
+                 churn=churn)
+        rec("hier_mom", HEADLINE, FRAC, r,
+            clean_loss=h_clean.train_loss[-1], churn=profile,
+            topology="two_tier", num_dropped=r.dropped,
+            num_arrived=r.arrived)
+
+    # -- acceptance: loss inflation at 20% Byzantine on the headline run ---
+    infl = {m: attacked[m] / clean[m] for m in clean}
+    acceptance = {
+        "attack": HEADLINE, "frac": FRAC,
+        "robust_inflation": infl["contextual_mom"],
+        "plain_inflation": infl["contextual"],
+        "fedavg_inflation": infl["fedavg"],
+        "meets_robust_inflation": bool(infl["contextual_mom"] <= 1.10),
+        "meets_plain_degrades": bool(infl["contextual"] >= 1.25),
+        "meets_fedavg_degrades": bool(infl["fedavg"] >= 1.5),
+    }
+    return {"benchmark": "robust_suite", "num_devices": N_DEV,
+            "gateways": N_GW, "rounds": rounds, "malicious_seed": ADV_SEED,
+            "records": records, "acceptance": acceptance}
+
+
+def run(rounds: int = 10) -> Dict:
+    results = collect(rounds)
+    for r in results["records"]:
+        loss = r.get("final_loss", r.get("final_loss_ungated"))
+        derived = f"loss={loss:.4f}"
+        if "inflation_ungated" in r:
+            derived += f";inflation={r['inflation_ungated']:.2f}x"
+        if "num_dropped" in r:
+            derived += f";dropped={r['num_dropped']}"
+        emit(f"robust_suite/{r['method']}/{r['attack']}/f{r['frac']:g}"
+             f"/{r['churn']}", 0.0, derived)
+    acc = results["acceptance"]
+    emit("robust_suite/acceptance", 0.0,
+         f"mom={acc['robust_inflation']:.2f}x;"
+         f"ctx={acc['plain_inflation']:.2f}x;"
+         f"fedavg={acc['fedavg_inflation']:.2f}x;"
+         f"pass={acc['meets_robust_inflation'] and acc['meets_plain_degrades'] and acc['meets_fedavg_degrades']}")
+    return results

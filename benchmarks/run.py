@@ -7,6 +7,7 @@
   async   — async edge runtime vs sync under straggler severity sweep
   hier    — hierarchical vs flat contextual: fan-in / tier-depth sweep
   bigmodel— streamed big-model round engine: memory model + equivalence
+  robust  — adversarial & churn sweep: robust contextual vs plain vs FedAvg
   kernels — Pallas hot-spot micro-benchmarks
   roofline— per-(arch × shape × mesh) roofline terms from the dry-run
 
@@ -31,7 +32,7 @@ def _registry():
     from . import (async_vs_sync, bigmodel_round, compress_sweep,
                    fig2_3_k2_variants, fig4_5_algorithms,
                    fig6_rounds_to_accuracy, fig7_alpha_stages, hier_vs_flat,
-                   kernel_bench, roofline_report)
+                   kernel_bench, robust_suite, roofline_report)
     return {
         "fig2_3": (fig2_3_k2_variants,
                    lambda q: dict(rounds=10 if q else 25), False),
@@ -49,6 +50,8 @@ def _registry():
                      lambda q: dict(rounds=8 if q else 16, quick=q), True),
         "compress": (compress_sweep,
                      lambda q: dict(rounds=8 if q else 16), True),
+        "robust": (robust_suite,
+                   lambda q: dict(rounds=10 if q else 20), True),
         "kernels": (kernel_bench, lambda q: dict(quick=q), True),
         "roofline": (roofline_report, lambda q: {}, False),
     }

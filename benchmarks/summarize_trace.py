@@ -33,8 +33,9 @@ from bench_trace import BenchFold, SPAN_RESERVED, span_fields  # noqa: E402
 # Only columns present in at least one record are rendered.
 IDENTITY_COLS = ("scenario", "topology", "method", "fleet_slowdown",
                  "dataset", "op", "shape", "mode", "scheme", "ratio",
-                 "depth", "gateways")
-METRIC_COLS = ("final_loss", "final_acc", "best_acc",
+                 "depth", "gateways", "attack", "frac", "churn")
+METRIC_COLS = ("final_loss", "final_loss_ungated", "inflation_ungated",
+               "num_dropped", "final_acc", "best_acc",
                "virtual_time_to_target_s", "loss_gap_vs_flat",
                "loss_gap_vs_sync", "loss_gap_vs_dense",
                "loss_gap_streamed_vs_fused", "oracle_max_abs_err",
@@ -186,6 +187,15 @@ def summarize(path: str) -> List[str]:
                                for k, v in sorted(scalars.items())))
     lines.append("")
     lines += _records_table(payload.get("records", []))
+    # acceptance-style blocks (dict-valued payload entries): the gated
+    # headline numbers, e.g. the robust suite's loss-inflation margins
+    for key in sorted(payload):
+        val = payload[key]
+        if key == "records" or not isinstance(val, dict):
+            continue
+        lines.append("")
+        lines.append(f"**{key}**: " + ", ".join(
+            f"{k}={_fmt(k, v)}" for k, v in sorted(val.items())))
     lines += slowest_spans_table(
         [f for _, _, f in sorted(slow, reverse=True)], n_spans)
     lines += _autotune_table(autotune)

@@ -1,0 +1,121 @@
+"""Adversarial edge FL demo: robust contextual solves under attack + churn.
+
+A 64-device fleet with 20% of its devices compromised runs Byzantine noise
+replacement (each malicious client reports Gaussian updates AND gradients
+at 25x the honest norm) while a churn wave knocks half the fleet offline
+mid-run.  The demo compares, on identical seeds:
+
+  * plain contextual aggregation — the poisoned gradient columns corrupt
+    the shared ĝ estimate and with it every honest client's c-term;
+  * robust contextual (``contextual_mom``) — per-client update clipping
+    plus median-of-means pooling on the (G, c) cross-term slots before the
+    same P×P solve;
+  * FedAvg — the undefended baseline, and krum / coordinate-median — the
+    classical robust baselines.
+
+Expected: the robust contextual run stays within ~10% of its own clean
+loss while plain contextual and FedAvg degrade markedly, and the
+hierarchical robust run rides through the churn wave.
+
+  PYTHONPATH=src python examples/edge_robust.py     (< 90 s on CPU)
+
+EXAMPLE_SMOKE=1 runs a tiny-step variant (CI keeps examples from rotting).
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.data import make_synthetic
+from repro.data.federated import FederatedDataset
+from repro.edge import uniform_fleet
+from repro.fl import ServerConfig, run_hier_simulation, run_simulation
+from repro.hier import HierConfig, two_tier_topology
+from repro.models import get_model
+from repro.models.config import ArchConfig
+from repro.models.logistic import logistic_apply, logistic_loss
+from repro.robust import (ByzantineGauss, RobustConfig, assign_adversaries,
+                          churn_schedule)
+
+SMOKE = os.environ.get("EXAMPLE_SMOKE", "") == "1"
+DIM, N_DEV, N_GW, SEED = 20, 64, 4, 42
+ROUNDS = 4 if SMOKE else 12
+ATTACK = ByzantineGauss(scale=25.0)
+ROBUST = RobustConfig(clip=2.0, pool="mom")
+
+
+def main():
+    xs, ys = make_synthetic(1.0, 1.0, num_devices=N_DEV,
+                            samples_per_device=30, dim=DIM, seed=5)
+    ds = FederatedDataset(xs, ys, np.ones(ys.shape, np.float32),
+                          xs.reshape(-1, DIM)[:400], ys.reshape(-1)[:400], 10)
+    params = get_model(ArchConfig(name="logreg", family="logreg",
+                                  input_dim=DIM, num_classes=10)
+                       ).init(jax.random.PRNGKey(0))
+    fleet = assign_adversaries(uniform_fleet(N_DEV), 0.2, seed=3)
+    print(f"fleet — {fleet.num_devices} devices, "
+          f"{len(fleet.malicious)} compromised: {fleet.malicious}")
+    print(f"attack — {ATTACK.name} at {ATTACK.scale:g}x the honest norm\n")
+
+    methods = (("contextual", None), ("contextual_mom", ROBUST),
+               ("fedavg", None), ("krum", RobustConfig()),
+               ("coordinate_median", None))
+
+    def flat(agg, rob, attack):
+        cfg = ServerConfig(aggregator=agg, num_devices=N_DEV,
+                           clients_per_round=16, lr=0.2, batch_size=10,
+                           min_epochs=1, max_epochs=4, attack=attack,
+                           malicious=fleet.malicious if attack else (),
+                           robust=rob)
+        tag = f"{agg}-{'byz' if attack else 'clean'}"
+        return run_simulation(tag, logistic_loss, logistic_apply, params,
+                              ds, cfg, num_rounds=ROUNDS,
+                              selection_seed=SEED, eval_every=ROUNDS)
+
+    header = "method              clean_loss  attacked   inflation"
+    print(f"{header}\n{'-' * len(header)}")
+    inflations = {}
+    for agg, rob in methods:
+        clean = flat(agg, rob, None).train_loss[-1]
+        atk = flat(agg, rob, ATTACK).train_loss[-1]
+        inflations[agg] = atk / clean
+        print(f"{agg:<18s} {clean:10.4f} {atk:10.4f} "
+              f"{inflations[agg]:9.2f}x")
+
+    # hierarchical: the same robust statistics inside every gateway/cloud
+    # tier solve, with a churn wave taking 50% of the fleet offline
+    hcfg = HierConfig(aggregator="hier_contextual", lr=0.2, batch_size=10,
+                      min_epochs=1, max_epochs=4, robust=ROBUST)
+    topo = two_tier_topology(fleet, N_GW)
+    clean_h = run_hier_simulation("hier-clean", logistic_loss, logistic_apply,
+                                  params, ds, hcfg, topo, num_rounds=ROUNDS,
+                                  selection_seed=SEED, eval_every=ROUNDS)
+    churn = churn_schedule("wave", N_DEV, clean_h.times[-1], seed=1)
+    byz_h = run_hier_simulation("hier-byz-churn", logistic_loss,
+                                logistic_apply, params, ds, hcfg, topo,
+                                num_rounds=ROUNDS, selection_seed=SEED,
+                                eval_every=ROUNDS, attack=ATTACK, churn=churn)
+    h_infl = byz_h.train_loss[-1] / clean_h.train_loss[-1]
+    print(f"\nhier robust ({N_GW} gateways) under attack + 50% churn wave: "
+          f"loss {clean_h.train_loss[-1]:.4f} -> {byz_h.train_loss[-1]:.4f} "
+          f"({h_infl:.2f}x), {byz_h.dropped} tasks dropped")
+
+    ok = (inflations["contextual_mom"] <= 1.15
+          and inflations["contextual"] >= 1.2
+          and inflations["fedavg"] >= 1.5)
+    if ok and not SMOKE:
+        print("\nACCEPTANCE: robust contextual within 15% of clean while "
+              "plain contextual\nand FedAvg degrade - PASS")
+    elif not SMOKE:
+        print("\nWARNING: expected margins not met on this seed - inspect "
+              "the table above.")
+    print("\nThe poisoned gradient columns corrupt the shared g_hat estimate "
+          "and with it\nevery honest client's c-term; clipping bounds each "
+          "row's leverage and the\nmedian-of-means pool re-estimates c from "
+          "the cross-term columns, so the\nsame contextual solve prices "
+          "honest updates as if the attackers were absent.")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,6 +54,10 @@ class AggregatorConfig:
     # sketched cross-terms without re-touching the parameter axis, while the
     # combine still applies the stacked (decoded) updates
     gram_override: Optional[Tuple[jax.Array, jax.Array]] = None
+    # robustness knobs consumed by the repro.robust aggregators (a
+    # repro.robust.gramstats.RobustConfig — typed opaquely so core stays
+    # import-free of the subsystems that register into it)
+    robust: Optional[Any] = None
 
 
 def _stacked_to_matrix(stacked: Pytree, scope: Optional[str]) -> jax.Array:

@@ -59,11 +59,15 @@ class EventScheduler:
     """Heap-of-events virtual-time simulator over a device fleet."""
 
     def __init__(self, fleet: Fleet, seed: int, flops_per_step: float,
-                 payload_bytes: float):
+                 payload_bytes: float, churn=None):
         self.fleet = fleet
         self.rng = np.random.RandomState(seed)
         self.flops_per_step = float(flops_per_step)
         self.payload_bytes = float(payload_bytes)
+        # optional churn schedule (repro.robust.churn duck interface:
+        # ``offline(device_id, t) -> bool``): a task dispatched while its
+        # device sits inside an active wave terminates as a DROPOUT
+        self.churn = churn
         self.now = 0.0
         self.stats = SchedulerStats()
         self.trace: List[Event] = []      # full event log (tests, debugging)
@@ -97,6 +101,12 @@ class EventScheduler:
         duration = prof.task_time(num_steps * self.flops_per_step,
                                   self.payload_bytes, self.rng)
         drops = self.rng.random_sample() < prof.dropout
+        # churn overrides the outcome AFTER the profile coin is consumed, so
+        # the RNG stream (and with it every non-churned event) is identical
+        # to the churn-free run — the determinism contract above holds per
+        # (fleet, seed, churn schedule)
+        if self.churn is not None and self.churn.offline(device_id, start):
+            drops = True
         if drops:
             # die uniformly somewhere inside the task
             duration *= float(self.rng.uniform(0.05, 0.95))

@@ -64,10 +64,24 @@ class DeviceProfile:
 class Fleet:
     name: str
     profiles: Tuple[DeviceProfile, ...]
+    # device ids under adversarial control (repro.robust: seeded assignment
+    # via assign_adversaries); empty for honest fleets.  Lives on the fleet
+    # so sync/async/hier runs over the same fleet see the same adversaries.
+    malicious: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        bad = [i for i in self.malicious
+               if not (0 <= i < len(self.profiles))]
+        if bad:
+            raise ValueError(f"malicious ids out of range for "
+                             f"{len(self.profiles)} devices: {bad}")
 
     @property
     def num_devices(self) -> int:
         return len(self.profiles)
+
+    def is_malicious(self, device_id: int) -> bool:
+        return device_id in self.malicious
 
     def __getitem__(self, device_id: int) -> DeviceProfile:
         return self.profiles[device_id]

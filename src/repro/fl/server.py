@@ -42,6 +42,13 @@ class ServerConfig:
     gram_scope: Optional[str] = None # e.g. "last_layer" (§III-B efficiency)
     ridge: float = 1e-6
     expected_pool: Optional[int] = None  # N' for contextual_expected
+    # -- adversarial wiring (repro.robust) --------------------------------
+    # all three stay hashable (frozen dataclasses / tuple): ServerConfig is
+    # an lru_cache key for the compiled round function, and the attack is
+    # jit-static so corruption happens inside the compiled round
+    attack: Optional[Any] = None         # AttackModel; None → honest run
+    malicious: Tuple[int, ...] = ()      # device ids under adversarial control
+    robust: Optional[Any] = None         # RobustConfig for robust aggregators
 
     @property
     def smoothness(self) -> float:
@@ -73,8 +80,29 @@ def build_round_fn(loss_fn: Callable, cfg: ServerConfig,
     agg_cfg = AggregatorConfig(
         name=cfg.aggregator,
         solve=SolveConfig(beta=beta, ridge=cfg.ridge),
-        gram_scope=cfg.gram_scope)
-    agg_fn = aggregate(cfg.aggregator)
+        gram_scope=cfg.gram_scope,
+        robust=cfg.robust)
+    try:
+        agg_fn = aggregate(cfg.aggregator)
+    except KeyError:
+        # robust variants register on package import; pull them in lazily so
+        # core never imports upward and honest runs never pay the import
+        from .. import robust  # noqa: F401
+        agg_fn = aggregate(cfg.aggregator)
+    # robust contextual variants consume the stacked per-client gradient
+    # reports (the (K, J) cross matrix their pooling defends) instead of the
+    # pre-averaged ĝ
+    grad_stack = getattr(agg_fn, "grad_stack", False)
+
+    # update-space attacks corrupt inside the jit (label_flip poisons the
+    # dataset in run_simulation instead); the adversary key derives by
+    # fold_in so the honest clients' key stream is bit-identical to the
+    # clean run — attacked vs clean losses differ only through the attack
+    attack = cfg.attack
+    if attack is not None and (attack.corrupts_data or not cfg.malicious):
+        attack = None
+    mal = (np.asarray(sorted(set(cfg.malicious)), np.int32)
+           if attack is not None else None)
 
     upd = partial(client_update, loss_fn, max_steps=max_steps,
                   batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu)
@@ -88,14 +116,27 @@ def build_round_fn(loss_fn: Callable, cfg: ServerConfig,
         deltas, first_grads = jax.vmap(
             lambda xx, yy, mm, ns, kk: upd(state.params, xx, yy, mm, ns, kk)
         )(cx, cy, cm, num_steps, keys)
+        if attack is not None:
+            from ..robust.attacks import corrupt_stacked
+            deltas, first_grads = corrupt_stacked(
+                attack, deltas, first_grads,
+                jnp.isin(sel, jnp.asarray(mal)),
+                jax.random.fold_in(key, 0x0BAD))
 
         if cfg.grad_sample > 0:
             gx, gy, gm = x[grad_sel], y[grad_sel], mask[grad_sel]
             grads = jax.vmap(lambda xx, yy, mm: local_gradient(
                 loss_fn, state.params, xx, yy, mm))(gx, gy, gm)
+            if attack is not None:
+                from ..robust.attacks import corrupt_stacked
+                _, grads = corrupt_stacked(
+                    attack, grads, grads,
+                    jnp.isin(grad_sel, jnp.asarray(mal)),
+                    jax.random.fold_in(key, 0x0BAD ^ 1))
         else:
             grads = first_grads
-        grad_est = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0), grads)
+        grad_est = (grads if grad_stack else jax.tree_util.tree_map(
+            lambda g: jnp.mean(g, axis=0), grads))
 
         if cfg.aggregator == "contextual_expected":
             new_params, info = agg_fn(state.params, deltas, grad_est, agg_cfg,

@@ -147,6 +147,12 @@ def run_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                    record_history: RecordHistory = True) -> SimulationResult:
     round_fn = _round_fn_cached(loss_fn, cfg, dataset.samples_per_device)
     steps_per_epoch = max(dataset.samples_per_device // cfg.batch_size, 1)
+    if (cfg.attack is not None and cfg.attack.corrupts_data
+            and cfg.malicious):
+        # label-flip adversaries poison their shards before the run; the
+        # update-space attacks corrupt inside the compiled round instead
+        from ..robust.attacks import poison_labels
+        dataset = poison_labels(dataset, cfg.malicious)
 
     state = init_server(jax.tree_util.tree_map(jnp.asarray, init_params))
     data = (jnp.asarray(dataset.x), jnp.asarray(dataset.y),
@@ -231,7 +237,8 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                          cfg, fleet, num_aggregations: int,
                          selection_seed: int = 1234, eval_every: int = 1,
                          collect_alpha: bool = False,
-                         record_history: RecordHistory = True
+                         record_history: RecordHistory = True,
+                         attack=None, churn=None
                          ) -> AsyncSimulationResult:
     """Event-driven async FL (``cfg`` is a :class:`repro.edge.AsyncConfig`).
 
@@ -244,6 +251,13 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     ``fedasync``) once ``cfg.buffer_size`` updates are present.  Dropouts
     lose their work; the freed slot goes to the next waiting device.  Runs
     until ``num_aggregations`` buffer flushes have been applied.
+
+    ``attack`` (a :class:`repro.robust.AttackModel`) corrupts each arrival
+    from a device in ``fleet.malicious`` before it enters the buffer
+    (label-flip attacks poison the malicious shards up front instead);
+    ``churn`` (a :class:`repro.robust.ChurnSchedule`) rides on the event
+    scheduler, turning tasks dispatched inside an active wave into
+    dropouts.
     """
     # Imported lazily: repro.edge imports repro.fl at module scope, so the
     # reverse edge must not exist at import time.
@@ -257,6 +271,13 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     if dataset.num_devices < cfg.num_devices:
         raise ValueError(f"dataset has {dataset.num_devices} device shards, "
                          f"need {cfg.num_devices}")
+
+    malicious = frozenset(getattr(fleet, "malicious", ()))
+    if attack is not None and attack.corrupts_data and malicious:
+        from ..robust.attacks import poison_labels
+        dataset = poison_labels(dataset, malicious)
+    live_attack = (attack if attack is not None
+                   and not attack.corrupts_data and malicious else None)
 
     steps_per_epoch = max(dataset.samples_per_device // cfg.batch_size, 1)
     max_steps = cfg.max_epochs * steps_per_epoch
@@ -272,7 +293,7 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     scheduler = EventScheduler(
         fleet, seed=selection_seed,
         flops_per_step=model_flops_per_step(params, cfg.batch_size),
-        payload_bytes=model_payload_bytes(params))
+        payload_bytes=model_payload_bytes(params), churn=churn)
     buffer = AsyncBuffer(cfg)
     epoch_rng = np.random.RandomState(selection_seed + 1)
     base_key = jax.random.PRNGKey(selection_seed)
@@ -324,6 +345,11 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                 delta, grad = upd(disp_params, x[evt.device_id],
                                   y[evt.device_id], mask[evt.device_id],
                                   jnp.int32(evt.num_steps), key)
+            if live_attack is not None and evt.device_id in malicious:
+                from ..robust.attacks import corrupt_one_jit
+                delta, grad = corrupt_one_jit(
+                    live_attack, delta, grad,
+                    jax.random.fold_in(key, 0x0BAD))
             buffer.add(BufferedUpdate(delta, grad, disp_version, evt.device_id))
             result.updates_per_device[evt.device_id] += 1
             if buffer.ready():
@@ -413,7 +439,8 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                         engine: str = "auto",
                         stream_chunk: Optional[int] = None,
                         mesh=None,
-                        record_history: RecordHistory = True
+                        record_history: RecordHistory = True,
+                        attack=None, churn=None
                         ) -> HierSimulationResult:
     """Synchronous rounds over a multi-tier topology (``cfg`` is a
     :class:`repro.hier.HierConfig`, ``topology`` a :class:`repro.hier.Topology`).
@@ -455,6 +482,16 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         raise ValueError(f"dataset has {dataset.num_devices} device shards, "
                          f"topology needs {fleet.num_devices}")
 
+    # -- adversarial wiring (repro.robust): label_flip poisons shards up
+    # front; update-space attacks corrupt the cohort's stacked rows after
+    # local training, with a key stream independent of the honest fold_ins
+    malicious = np.asarray(sorted(getattr(fleet, "malicious", ())), np.int64)
+    if attack is not None and attack.corrupts_data and malicious.size:
+        from ..robust.attacks import poison_labels
+        dataset = poison_labels(dataset, malicious)
+    live_attack = (attack if attack is not None
+                   and not attack.corrupts_data and malicious.size else None)
+
     steps_per_epoch = max(dataset.samples_per_device // cfg.batch_size, 1)
     max_steps = cfg.max_epochs * steps_per_epoch
     batch_update = _batched_client_update_fn(loss_fn, max_steps,
@@ -471,7 +508,7 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     scheduler = EventScheduler(
         fleet, seed=selection_seed,
         flops_per_step=model_flops_per_step(params, cfg.batch_size),
-        payload_bytes=mbytes)
+        payload_bytes=mbytes, churn=churn)
     tr = current_tracker().scope(f"hier/{name}")
     if tr.active:
         tr.jot(runtime="hier", run=name, aggregator=cfg.aggregator,
@@ -508,10 +545,12 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         budget = float(os.environ.get("REPRO_DENSE_ROUND_BYTES", 1 << 30))
         engine = ("fused" if device_decodes or dense_bytes <= budget
                   else "streamed")
+    robust_cfg = getattr(cfg, "robust", None)
     if engine == "streamed":
         eng = StreamedRoundEngine(params, solve_cfg, tier_mode,
                                   cfg.gram_scope, chunk=stream_chunk,
-                                  mesh=mesh, donate_params=True)
+                                  mesh=mesh, donate_params=True,
+                                  robust=robust_cfg)
         # the streamed combine donates its params argument off-CPU, and
         # jnp.asarray above is a no-copy identity on jax arrays: copy once
         # so round 1 never invalidates the caller's init_params buffers
@@ -521,7 +560,8 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         # dense engine: summaries carry FLAT f32 vectors for ū/ĝ and every
         # tier stage is one shape-keyed jit call; only the final cloud
         # delta converts back to the parameter tree
-        eng = HierRoundEngine(params, solve_cfg, tier_mode, cfg.gram_scope)
+        eng = HierRoundEngine(params, solve_cfg, tier_mode, cfg.gram_scope,
+                              robust=robust_cfg)
 
     # Summary compression (repro.compress): every compressing sender keeps
     # per-sender error-feedback residuals that persist ACROSS rounds, and
@@ -586,6 +626,15 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                     deltas, grads = batch_update(params, x[sel], y[sel],
                                                  mask[sel],
                                                  jnp.asarray(num_steps), keys)
+                if live_attack is not None:
+                    from ..robust.attacks import corrupt_stacked_jit
+                    mal_mask = jnp.asarray(np.isin(
+                        np.array([d for d, _ in participants]), malicious))
+                    if bool(np.any(np.asarray(mal_mask))):
+                        akey = jax.random.fold_in(
+                            jax.random.PRNGKey(selection_seed + 7919), t)
+                        deltas, grads = corrupt_stacked_jit(
+                            live_attack, deltas, grads, mal_mask, akey)
                 # the round context is the engine's view of the cohort: the fused
                 # engine flattens to (P, n) f32 matrices (cohort slicing is a single
                 # in-jit gather per tier node), the streamed engine runs one chunked

@@ -164,7 +164,7 @@ def gather_mean(M: jax.Array, sel: jax.Array) -> jax.Array:
 def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
                   pool_scale: float = 1.0, sum_to: Optional[float] = None,
                   gather: bool = False, stack: bool = False, scope_key=None,
-                  scope_idx=None) -> Callable:
+                  scope_idx=None, robust=None) -> Callable:
     """Compiled tier stage — the fused equivalent of
     ``gateway.summarize_updates`` (``sum_to=1`` makes it the parent-tier
     merge).  Returns a dict with keys G, c, alpha, u_bar, ghat, info.
@@ -180,10 +180,15 @@ def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
     per matrix per node."""
     if gather and stack:
         raise ValueError("summary_stage: gather and stack are exclusive")
+    # robust statistics only harden a contextual solve (and are a
+    # RobustConfig — frozen, hence a valid piece of the stage key)
+    if robust is not None and (mode != "contextual"
+                               or not getattr(robust, "enabled", False)):
+        robust = None
     ns = n if scope_idx is None else len(scope_idx)
     gram_impl = _gram_impl(K, ns)
     key = ("summary", K, n, solve_cfg, mode, pool_scale, sum_to, gather,
-           stack, scope_key, gram_impl.backend)
+           stack, scope_key, robust, gram_impl.backend)
     fn = _STAGES.get(key)
     if fn is not None:
         return fn
@@ -199,9 +204,26 @@ def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
     idx = None if scope_idx is None else jnp.asarray(scope_idx)
     beta = cfg.beta
 
+    if robust is not None:
+        from ..robust.gramstats import robustify
+
     def body(U, GR, counts, g):
         w = counts / jnp.maximum(jnp.sum(counts), 1e-12)
         ghat = w @ GR
+        if robust is not None:
+            # robust tier solve: the full (K, K) cross matrix Δ·gᵀ replaces
+            # the premixed c so the pooling can down-vote poisoned gradient
+            # columns; the shipped ĝ stays the plain weighted mean (parity
+            # with the streamed engine, which holds no per-member norms)
+            Us = U if idx is None else U[:, idx]
+            GRs = GR if idx is None else GR[:, idx]
+            Gr, cr, s = robustify(Us @ Us.T, Us @ GRs.T, w, robust)
+            alpha = solve_alpha(Gr, cr, cfg)
+            eff = s * alpha
+            info = solve_diagnostics(Gr, cr, alpha, beta)
+            info["clip_scale"] = s
+            return {"G": Gr, "c": cr, "alpha": eff, "u_bar": eff @ U,
+                    "ghat": ghat, "info": info}
         g_solve = ghat if g is None else g
         Us, gs = _scoped(U, g_solve, idx)
         G, c = gram_fn(Us, gs)
@@ -236,7 +258,7 @@ def summary_stage(K: int, n: int, solve_cfg: SolveConfig, mode: str, *,
 def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
                 solve_scale: float = 1.0, gather: bool = False,
                 stack: bool = False, scope_key=None,
-                scope_idx=None) -> Callable:
+                scope_idx=None, robust=None) -> Callable:
     """Compiled final tier: ``fn(U (P,n), ghat (n,), counts, override?) →
     (delta (n,), info)`` — the fused equivalent of
     ``hier_server.cloud_aggregate``.
@@ -252,10 +274,15 @@ def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
     override?)`` — child combinations stacked inside the jit boundary."""
     if gather and stack:
         raise ValueError("cloud_stage: gather and stack are exclusive")
+    # robust applies to the raw-update solve only (star/relay — the cohort
+    # the attacker sits in); combo children are already robustified below
+    if robust is not None and (kind != "raw"
+                               or not getattr(robust, "enabled", False)):
+        robust = None
     ns = n if scope_idx is None else len(scope_idx)
     gram_impl = _gram_impl(P, ns)
     key = ("cloud", P, n, solve_cfg, kind, solve_scale, gather, stack,
-           scope_key, gram_impl.backend)
+           scope_key, robust, gram_impl.backend)
     fn = _STAGES.get(key)
     if fn is not None:
         return fn
@@ -271,11 +298,28 @@ def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
     idx = None if scope_idx is None else jnp.asarray(scope_idx)
     beta = cfg.beta
 
+    if robust is not None:
+        from ..robust.gramstats import robustify
+
     def body(U, ghat, counts, override):
         if kind == "fedavg":
             alpha = counts / jnp.maximum(jnp.sum(counts), 1e-12)
             info = {"alpha": alpha, "gamma": alpha}
             return alpha @ U, info
+        if robust is not None:
+            # ``ghat`` is the (K, n) per-member gradient matrix here — the
+            # gather wrapper skips the mean so the pooling sees the columns
+            GR = ghat
+            w = counts / jnp.maximum(jnp.sum(counts), 1e-12)
+            Us = U if idx is None else U[:, idx]
+            GRs = GR if idx is None else GR[:, idx]
+            Gr, cr, s = robustify(Us @ Us.T, Us @ GRs.T, w, robust)
+            alpha = solve_alpha(Gr, cr, cfg)
+            eff = s * alpha
+            info = {"alpha": eff, "gamma": eff,
+                    **solve_diagnostics(Gr, cr, alpha, beta),
+                    "gram_diag": jnp.diag(Gr), "clip_scale": s}
+            return eff @ U, info
         if override is not None:
             G, c = override
         else:
@@ -290,6 +334,8 @@ def cloud_stage(P: int, n: int, solve_cfg: SolveConfig, kind: str, *,
     if gather:
         @jax.jit
         def stage(D, GM, sel, counts, override=None):
+            if robust is not None:
+                return body(D[sel], GM[sel], counts, override)
             return body(D[sel], jnp.mean(GM[sel], axis=0), counts, override)
     elif stack:
         @jax.jit
@@ -333,12 +379,17 @@ class HierRoundEngine:
     name = "fused"
 
     def __init__(self, params_template: Pytree, solve_cfg: SolveConfig,
-                 tier_mode: str, gram_scope: Optional[str] = None):
+                 tier_mode: str, gram_scope: Optional[str] = None,
+                 robust=None):
         self.n = int(sum(l.size for l in
                          jax.tree_util.tree_leaves(params_template)))
         self.solve_cfg = solve_cfg
         self.tier_mode = tier_mode
         self.gram_scope = gram_scope
+        # RobustConfig (or None): hardened tier solves for the member-level
+        # stages — the context passes it to gateway/cloud_raw only (merge and
+        # combo stages act on children that are already robustified)
+        self.robust = robust
         self._scope_idx = scope_indices(params_template, gram_scope)
         self._scope_key = (None if self._scope_idx is None else
                            (gram_scope, len(self._scope_idx),
@@ -348,19 +399,20 @@ class HierRoundEngine:
 
     def tier(self, K: int, *, pool_scale: float = 1.0,
              sum_to: Optional[float] = None, gather: bool = False,
-             stack: bool = False) -> Callable:
+             stack: bool = False, robust=None) -> Callable:
         return summary_stage(K, self.n, self.solve_cfg, self.tier_mode,
                              pool_scale=pool_scale, sum_to=sum_to,
                              gather=gather, stack=stack,
                              scope_key=self._scope_key,
-                             scope_idx=self._scope_idx)
+                             scope_idx=self._scope_idx, robust=robust)
 
     def cloud(self, P: int, kind: str, *, solve_scale: float = 1.0,
-              gather: bool = False, stack: bool = False) -> Callable:
+              gather: bool = False, stack: bool = False,
+              robust=None) -> Callable:
         return cloud_stage(P, self.n, self.solve_cfg, kind,
                            solve_scale=solve_scale, gather=gather,
                            stack=stack, scope_key=self._scope_key,
-                           scope_idx=self._scope_idx)
+                           scope_idx=self._scope_idx, robust=robust)
 
     # -- engine-agnostic round API ------------------------------------------
 
@@ -434,11 +486,12 @@ class FusedRoundContext:
         rows = self._rows(idxs)
         if rows is None:
             stage = self.engine.tier(len(idxs), pool_scale=pool_scale,
-                                     gather=True)
+                                     gather=True, robust=self.engine.robust)
             return stage(self.D, self.GM,
                          jnp.asarray(np.asarray(idxs, np.int32)), ones,
                          solve_grad)
-        stage = self.engine.tier(len(idxs), pool_scale=pool_scale)
+        stage = self.engine.tier(len(idxs), pool_scale=pool_scale,
+                                 robust=self.engine.robust)
         return stage(rows[0], rows[1], ones, solve_grad)
 
     def merge(self, u_refs, g_refs, counts, *,
@@ -451,12 +504,18 @@ class FusedRoundContext:
                   solve_scale: float = 1.0) -> Tuple[jax.Array, Dict]:
         ones = jnp.ones((len(idxs),), jnp.float32)
         rows = self._rows(idxs)
+        robust = self.engine.robust
         if rows is None:
             stage = self.engine.cloud(len(idxs), kind,
-                                      solve_scale=solve_scale, gather=True)
+                                      solve_scale=solve_scale, gather=True,
+                                      robust=robust)
             return stage(self.D, self.GM,
                          jnp.asarray(np.asarray(idxs, np.int32)), ones)
-        stage = self.engine.cloud(len(idxs), kind, solve_scale=solve_scale)
+        stage = self.engine.cloud(len(idxs), kind, solve_scale=solve_scale,
+                                  robust=robust)
+        if (robust is not None and kind == "raw"
+                and getattr(robust, "enabled", False)):
+            return stage(rows[0], rows[1], ones)
         return stage(rows[0], jnp.mean(rows[1], axis=0), ones)
 
     def cloud_combo(self, u_refs, counts, ghat, *, kind: str = "combo",

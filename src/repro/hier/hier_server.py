@@ -198,6 +198,10 @@ class HierConfig:
     max_epochs: int = 20
     gram_scope: Optional[str] = None
     ridge: float = 1e-6
+    robust: Optional[Any] = None         # repro.robust RobustConfig: clip +
+                                         # median-of-means/trimmed pooling on
+                                         # the tier (G, c) statistics before
+                                         # each contextual solve
 
     def __post_init__(self):
         if self.aggregator not in ("hier_contextual", "hier_fedavg",
@@ -223,6 +227,23 @@ class HierConfig:
                                  "gateway_grad='local' only: the gradient "
                                  "pre-pass would ship full-width ĝ both ways "
                                  "and defeat the uplink budget")
+        if self.robust is not None:
+            from ..robust.gramstats import RobustConfig
+            if not isinstance(self.robust, RobustConfig):
+                raise TypeError("HierConfig.robust must be a "
+                                "repro.robust.RobustConfig, got "
+                                f"{type(self.robust).__name__}")
+            if self.aggregator != "hier_contextual":
+                raise ValueError("robust tier statistics require the "
+                                 "'hier_contextual' aggregator (the solve "
+                                 "they harden), got "
+                                 f"'{self.aggregator}'")
+            if self.gateway_grad != "local":
+                raise ValueError("robust tier statistics require "
+                                 "gateway_grad='local': median-of-means/"
+                                 "trimmed pooling acts on the per-member "
+                                 "gradient columns, which the global "
+                                 "pre-pass pre-averages away")
 
     @property
     def smoothness(self) -> float:

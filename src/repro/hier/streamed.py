@@ -133,21 +133,41 @@ def _cloud_solve_info(Gs, c, cfg):
 
 
 def tier_stage(P: int, K: int, solve_cfg: SolveConfig, mode: str, *,
-               pool_scale: float = 1.0) -> Callable:
+               pool_scale: float = 1.0, robust=None) -> Callable:
     """Device-tier stage over row indices: ``fn(G, C, idx (K,), counts,
-    g_w?) -> {G, c, alpha, u_w, ghat_w, info}``."""
-    key = ("stier", P, K, solve_cfg, mode, pool_scale)
+    g_w?) -> {G, c, alpha, u_w, ghat_w, info}``.
+
+    With ``robust`` (a RobustConfig) the cohort's cross sub-block
+    ``C[idx][:, idx]`` — exactly the fused engine's ``Us @ GRsᵀ`` — feeds
+    clip + pooling before the solve; the shipped ĝ mix stays the plain
+    weighted mean (the streamed statistics hold no per-member grad norms,
+    and fused/streamed parity pins that choice)."""
+    if robust is not None and (mode != "contextual"
+                               or not getattr(robust, "enabled", False)):
+        robust = None
+    key = ("stier", P, K, solve_cfg, mode, pool_scale, robust)
     fn = _STAGES.get(key)
     if fn is not None:
         return fn
     cfg = _adjust(solve_cfg, scale=pool_scale)
+    if robust is not None:
+        from ..robust.gramstats import robustify
 
     @jax.jit
     def stage(G, C, idx, counts, g_w=None):
         wts = counts / jnp.maximum(jnp.sum(counts), 1e-12)
         ghat_w = jnp.zeros((P,), jnp.float32).at[idx].set(wts)
-        g_solve = ghat_w if g_w is None else g_w
         Gs = G[idx][:, idx]
+        if robust is not None:
+            Gr, cr, s = robustify(Gs, C[idx][:, idx], wts, robust)
+            alpha = solve_alpha(Gr, cr, cfg)
+            eff = s * alpha
+            info = _fused.solve_diagnostics(Gr, cr, alpha, cfg.beta)
+            info["clip_scale"] = s
+            u_w = jnp.zeros((P,), jnp.float32).at[idx].set(eff)
+            return {"G": Gr, "c": cr, "alpha": eff, "u_w": u_w,
+                    "ghat_w": ghat_w, "info": info}
+        g_solve = ghat_w if g_w is None else g_w
         c = C[idx] @ g_solve
         alpha, info = _solve_info(Gs, c, cfg, mode, wts)
         u_w = jnp.zeros((P,), jnp.float32).at[idx].set(alpha)
@@ -184,14 +204,20 @@ def merge_stage(P: int, K: int, solve_cfg: SolveConfig, mode: str, *,
 
 
 def cloud_raw_stage(P: int, K: int, solve_cfg: SolveConfig, kind: str, *,
-                    solve_scale: float = 1.0) -> Callable:
+                    solve_scale: float = 1.0, robust=None) -> Callable:
     """Final tier over raw device rows (star / relay): ``fn(G, C, idx,
-    counts) -> {u_w, info}`` — fused ``cloud_stage``'s math on sub-blocks."""
-    key = ("scloud_raw", P, K, solve_cfg, kind, solve_scale)
+    counts) -> {u_w, info}`` — fused ``cloud_stage``'s math on sub-blocks,
+    with the same robust clip+pool hook on the cross sub-block."""
+    if robust is not None and (kind != "raw"
+                               or not getattr(robust, "enabled", False)):
+        robust = None
+    key = ("scloud_raw", P, K, solve_cfg, kind, solve_scale, robust)
     fn = _STAGES.get(key)
     if fn is not None:
         return fn
     cfg = _adjust(solve_cfg, scale=solve_scale)
+    if robust is not None:
+        from ..robust.gramstats import robustify
 
     @jax.jit
     def stage(G, C, idx, counts):
@@ -199,6 +225,14 @@ def cloud_raw_stage(P: int, K: int, solve_cfg: SolveConfig, kind: str, *,
         if kind == "fedavg":
             alpha = wts
             info = {"alpha": alpha, "gamma": alpha}
+        elif robust is not None:
+            Gr, cr, s = robustify(G[idx][:, idx], C[idx][:, idx], wts,
+                                  robust)
+            gamma = solve_alpha(Gr, cr, cfg)
+            alpha = s * gamma
+            info = {"alpha": alpha, "gamma": alpha,
+                    **_fused.solve_diagnostics(Gr, cr, gamma, cfg.beta),
+                    "gram_diag": jnp.diag(Gr), "clip_scale": s}
         else:
             ghat_w = jnp.zeros((P,), jnp.float32).at[idx].set(wts)
             Gs = G[idx][:, idx]
@@ -316,12 +350,15 @@ class StreamedRoundEngine:
                  tier_mode: str, gram_scope: Optional[str] = None, *,
                  chunk: Optional[int] = None,
                  mesh: Optional["jax.sharding.Mesh"] = None,
-                 donate_params: bool = False):
+                 donate_params: bool = False, robust=None):
         self.n = int(sum(l.size for l in
                          jax.tree_util.tree_leaves(params_template)))
         self.solve_cfg = solve_cfg
         self.tier_mode = tier_mode
         self.gram_scope = gram_scope
+        # RobustConfig (or None), applied at the member-level stages only —
+        # same placement as the fused engine
+        self.robust = robust
         self.chunk = int(chunk if chunk is not None else
                          os.environ.get("REPRO_STREAM_CHUNK", DEFAULT_CHUNK))
         if self.chunk < 1:
@@ -491,7 +528,8 @@ class StreamedRoundContext:
     def gateway(self, idxs, *, solve_grad=None,
                 pool_scale: float = 1.0) -> Dict[str, Any]:
         stage = tier_stage(self.P, len(idxs), self.engine.solve_cfg,
-                           self.engine.tier_mode, pool_scale=pool_scale)
+                           self.engine.tier_mode, pool_scale=pool_scale,
+                           robust=self.engine.robust)
         g_w = (None if solve_grad is None
                else jnp.asarray(solve_grad.w, jnp.float32))
         out = stage(self.G, self.C, jnp.asarray(np.asarray(idxs, np.int32)),
@@ -529,7 +567,8 @@ class StreamedRoundContext:
     def cloud_raw(self, idxs, kind: str, *,
                   solve_scale: float = 1.0) -> Tuple[RowMix, Dict]:
         stage = cloud_raw_stage(self.P, len(idxs), self.engine.solve_cfg,
-                                kind, solve_scale=solve_scale)
+                                kind, solve_scale=solve_scale,
+                                robust=self.engine.robust)
         out = stage(self.G, self.C,
                     jnp.asarray(np.asarray(idxs, np.int32)),
                     jnp.ones((len(idxs),), jnp.float32))

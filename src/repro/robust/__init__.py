@@ -1,0 +1,33 @@
+"""Adversarial & churn robustness suite (PR 8).
+
+Three composable pieces:
+
+  * :mod:`.attacks`    — ``AttackModel`` adversaries (byzantine_gauss,
+    sign_flip, scaled_update, label_flip), per-device adversary assignment
+    on the :class:`~repro.edge.profiles.Fleet`, and the stacked-corruption
+    helpers the three simulation loops share.
+  * :mod:`.churn`      — time-scheduled mass-dropout/rejoin waves layered
+    on the PR-1 event scheduler.
+  * :mod:`.gramstats`  — clipping + median-of-means/trimmed pooling on the
+    contextual (G, c) statistics, usable inside the fused/streamed jit
+    stages; :mod:`.aggregators` registers the flat robust variants
+    (``contextual_clipped``, ``contextual_mom``, ``krum``,
+    ``coordinate_median``) in ``core.aggregation``.
+
+Importing this package registers the robust aggregators.
+"""
+from . import aggregators as _aggregators  # noqa: F401 (registry side effect)
+from .attacks import (AttackModel, ByzantineGauss, LabelFlip, ScaledUpdate,
+                      SignFlip, assign_adversaries, available_attacks,
+                      corrupt_one_jit, corrupt_stacked, corrupt_stacked_jit,
+                      get_attack, poison_labels)
+from .churn import ChurnSchedule, ChurnWave, churn_schedule
+from .gramstats import RobustConfig, clip_scales, pool_cross, robustify
+
+__all__ = [
+    "AttackModel", "ByzantineGauss", "SignFlip", "ScaledUpdate", "LabelFlip",
+    "assign_adversaries", "available_attacks", "corrupt_one_jit",
+    "corrupt_stacked", "corrupt_stacked_jit", "get_attack", "poison_labels",
+    "ChurnSchedule", "ChurnWave", "churn_schedule",
+    "RobustConfig", "clip_scales", "pool_cross", "robustify",
+]

@@ -1,0 +1,217 @@
+"""Adversarial client models for the edge runtime.
+
+An attack is a frozen, hashable dataclass implementing the
+:class:`AttackModel` protocol: ``corrupt(delta, grad, key)`` maps one
+client's honest (update, gradient) pytrees to the adversarial pair it
+reports instead.  Hashability matters — attacks ride inside
+``ServerConfig`` (an ``lru_cache`` key for the compiled round function) and
+are jit-static, so the sync path corrupts *inside* the compiled round.
+
+Taxonomy (cf. "FL Aggregation: New Robust Algorithms with Guarantees",
+arXiv:2205.10864):
+
+  * ``byzantine_gauss`` — replaces BOTH the update and the gradient report
+    with Gaussian noise scaled to ``scale ×`` the honest norm.  Corrupting
+    the gradient too is what makes plain contextual degrade: adversarial
+    gradient reports poison the ĝ estimate and through it every honest
+    client's c-term, not just the attacker's row.
+  * ``sign_flip``      — reports ``−factor·Δ, −factor·g`` (directed attack).
+  * ``scaled_update``  — model-replacement boost ``factor·Δ`` (gradient
+    report left honest — the stealthier variant clipping is built for).
+  * ``label_flip``     — data poisoning: ``corrupts_data`` attacks leave the
+    update path alone and instead flip the malicious shards' training
+    labels before the run (:func:`poison_labels`).
+
+Adversary placement is a seeded draw on the :class:`~repro.edge.profiles.Fleet`
+(:func:`assign_adversaries` → ``fleet.malicious``), so every runtime — sync,
+async, hierarchical — sees the same compromised devices for a given
+(fleet, fraction, seed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Any, ClassVar, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.federated import FederatedDataset
+from ..edge.profiles import Fleet
+
+Pytree = Any
+
+
+@runtime_checkable
+class AttackModel(Protocol):
+    """What the runtimes require of an adversary."""
+    name: str
+    corrupts_data: bool
+
+    def corrupt(self, delta: Pytree, grad: Pytree,
+                key: jax.Array) -> Tuple[Pytree, Pytree]:
+        ...
+
+
+def _tree_norm(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)) + 1e-30)
+
+
+def _noise_like(tree: Pytree, key: jax.Array, target_norm: jax.Array
+                ) -> Pytree:
+    """Gaussian pytree with global norm ``target_norm`` (direction uniform
+    on the sphere — carries zero signal, maximal ĝ damage per byte)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noise = [jax.random.normal(k, l.shape, jnp.float32)
+             for k, l in zip(keys, leaves)]
+    nn = _tree_norm(noise)
+    scaled = [(n * (target_norm / nn)).astype(l.dtype)
+              for n, l in zip(noise, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, scaled)
+
+
+@dataclass(frozen=True)
+class ByzantineGauss:
+    """Noise replacement at ``scale ×`` the honest norms, on update AND
+    gradient report."""
+    scale: float = 10.0
+    name: ClassVar[str] = "byzantine_gauss"
+    corrupts_data: ClassVar[bool] = False
+
+    def corrupt(self, delta, grad, key):
+        kd, kg = jax.random.split(key)
+        return (_noise_like(delta, kd, self.scale * _tree_norm(delta)),
+                _noise_like(grad, kg, self.scale * _tree_norm(grad)))
+
+
+@dataclass(frozen=True)
+class SignFlip:
+    """Reports the negated (optionally boosted) update and gradient."""
+    factor: float = 1.0
+    name: ClassVar[str] = "sign_flip"
+    corrupts_data: ClassVar[bool] = False
+
+    def corrupt(self, delta, grad, key):
+        del key
+        neg = lambda l: (-self.factor * l.astype(jnp.float32)).astype(l.dtype)
+        return (jax.tree_util.tree_map(neg, delta),
+                jax.tree_util.tree_map(neg, grad))
+
+
+@dataclass(frozen=True)
+class ScaledUpdate:
+    """Model-replacement boost: ``factor × Δ``, honest gradient report."""
+    factor: float = 10.0
+    name: ClassVar[str] = "scaled_update"
+    corrupts_data: ClassVar[bool] = False
+
+    def corrupt(self, delta, grad, key):
+        del key
+        boost = lambda l: (self.factor * l.astype(jnp.float32)).astype(l.dtype)
+        return jax.tree_util.tree_map(boost, delta), grad
+
+
+@dataclass(frozen=True)
+class LabelFlip:
+    """Data poisoning: training labels of malicious shards are flipped to
+    ``(num_classes − 1) − y`` before the run (:func:`poison_labels`); the
+    update path itself is honest."""
+    name: ClassVar[str] = "label_flip"
+    corrupts_data: ClassVar[bool] = True
+
+    def corrupt(self, delta, grad, key):
+        del key
+        return delta, grad
+
+
+_ATTACKS = {"byzantine_gauss": ByzantineGauss, "sign_flip": SignFlip,
+            "scaled_update": ScaledUpdate, "label_flip": LabelFlip}
+
+
+def get_attack(name: str, **kw) -> AttackModel:
+    if name not in _ATTACKS:
+        raise KeyError(f"unknown attack '{name}'; have {sorted(_ATTACKS)}")
+    return _ATTACKS[name](**kw)
+
+
+def available_attacks() -> Tuple[str, ...]:
+    return tuple(sorted(_ATTACKS))
+
+
+# ---------------------------------------------------------------------------
+# adversary placement + corruption helpers shared by the three runtimes
+# ---------------------------------------------------------------------------
+
+def assign_adversaries(fleet: Fleet, frac: float, seed: int = 0) -> Fleet:
+    """Seeded draw of ``round(frac · N)`` compromised devices onto the fleet
+    (``fleet.malicious``).  Deterministic per (fleet size, frac, seed) and
+    independent of the data/selection RNGs, like the slow-cohort draw in
+    :func:`~repro.edge.profiles.bimodal_fleet`."""
+    if not (0.0 <= frac < 1.0):
+        raise ValueError(f"malicious fraction must be in [0, 1), got {frac}")
+    m = int(round(frac * fleet.num_devices))
+    if m == 0:
+        return dataclasses.replace(fleet, malicious=())
+    rng = np.random.RandomState(seed)
+    ids = rng.choice(fleet.num_devices, m, replace=False)
+    return dataclasses.replace(fleet,
+                               malicious=tuple(sorted(int(i) for i in ids)))
+
+
+def poison_labels(dataset: FederatedDataset, malicious) -> FederatedDataset:
+    """Label-flip poisoning of the malicious device shards: ``y ← (C−1) − y``
+    on train labels only (test set stays clean — accuracy is measured
+    against the truth the attacker is trying to move the model away from)."""
+    mal = np.asarray(sorted(set(int(i) for i in malicious)), np.int64)
+    if mal.size == 0:
+        return dataset
+    y = np.array(dataset.y)
+    y[mal] = (dataset.num_classes - 1) - y[mal]
+    return FederatedDataset(x=dataset.x, y=y, mask=dataset.mask,
+                            test_x=dataset.test_x, test_y=dataset.test_y,
+                            num_classes=dataset.num_classes)
+
+
+def corrupt_stacked(attack: AttackModel, deltas: Pytree, grads: Pytree,
+                    mask: jax.Array, key: jax.Array
+                    ) -> Tuple[Pytree, Pytree]:
+    """Apply ``attack`` to the masked rows of stacked (K-leading) update /
+    gradient pytrees: vmapped corruption + a where-select, so honest rows
+    are bit-identical to the clean path.  Pure jax — runs inside the sync
+    round jit and is itself jitted for the eager hier/async paths."""
+    K = mask.shape[0]
+    keys = jax.random.split(key, K)
+    cd, cg = jax.vmap(lambda d, g, k: attack.corrupt(d, g, k)
+                      )(deltas, grads, keys)
+
+    def mix(c, o):
+        m = jnp.reshape(mask, (-1,) + (1,) * (o.ndim - 1))
+        return jnp.where(m, c, o)
+
+    return (jax.tree_util.tree_map(mix, cd, deltas),
+            jax.tree_util.tree_map(mix, cg, grads))
+
+
+@lru_cache(maxsize=16)
+def _corrupt_stacked_jit(attack: AttackModel):
+    return jax.jit(lambda d, g, m, k: corrupt_stacked(attack, d, g, m, k))
+
+
+def corrupt_stacked_jit(attack: AttackModel, deltas, grads, mask, key):
+    """Compiled :func:`corrupt_stacked` (one cache entry per attack, one
+    compile per cohort shape) for the eager hier call site."""
+    return _corrupt_stacked_jit(attack)(deltas, grads, mask, key)
+
+
+@lru_cache(maxsize=16)
+def _corrupt_one_jit(attack: AttackModel):
+    return jax.jit(lambda d, g, k: attack.corrupt(d, g, k))
+
+
+def corrupt_one_jit(attack: AttackModel, delta, grad, key):
+    """Compiled single-client corruption for the async per-arrival path."""
+    return _corrupt_one_jit(attack)(delta, grad, key)

@@ -1,0 +1,142 @@
+"""Robust statistics on the contextual (G, c) slots.
+
+Every contextual solve in the repo — flat registry, fused tier stages,
+streamed accumulated statistics — consumes the pair
+
+    G = U Uᵀ   (K×K update Gram),    c_k = ⟨Δ_k, ĝ⟩,
+
+and ĝ is itself a mean of per-client gradient reports, so c is a row-mean
+of the cross matrix ``C = U Gᵀ`` (``C[k, j] = ⟨Δ_k, g_j⟩``).  Both slots are
+where a Byzantine client does its damage:
+
+  * a scaled/noised **update** inflates row/column k of G and row k of C
+    (and through α ∝ −G⁻¹c, the whole solve);
+  * a corrupted **gradient report** poisons every client's c_k through the
+    mean over columns j — the honest clients' prices, not just the
+    attacker's.
+
+:func:`robustify` defends both, purely in K-dimensional statistics space
+(never touching the parameter axis, so it composes with the streamed
+engine's accumulated ``C = D GMᵀ`` exactly as with the fused dense path):
+
+  * **clipping** — per-client scales ``s_k = min(1, τ/‖Δ_k‖)`` with
+    ``τ = clip × median ‖Δ‖`` read off ``diag G``; ``G ← s sᵀ ⊙ G``,
+    ``C ← diag(s) C``.  The caller applies ``α_eff = s ⊙ α`` so the
+    combine uses the *clipped* updates the solve priced.
+  * **pooling** — c_k is re-estimated from row k of the (clipped) cross
+    matrix with median-of-means over index buckets or a trimmed mean,
+    instead of the poisoning-prone plain mean over gradient columns.
+
+Breakdown point: MoM with B buckets tolerates < B/2 poisoned buckets; the
+auto default (largest odd ``B <= J``, i.e. singleton buckets — a straight
+column median) survives any f < 50% of gradient columns poisoned, the best
+the family offers at round-cohort sizes.  The trimmed mean tolerates
+f < trim_frac.  With defenses disabled
+(``clip=None, pool="mean"``) :func:`robustify` is an exact identity on
+(G, c) — tested.
+
+All functions are pure jax with static shapes, usable inside the fused /
+streamed jit stages; :class:`RobustConfig` is frozen and hashable so it can
+join shape-keyed stage-cache keys and ``ServerConfig`` lru_cache keys.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+@dataclass(frozen=True)
+class RobustConfig:
+    """Knobs of the robustified contextual statistics (and the krum
+    baseline's f parameter).  Frozen + hashable by design: instances key
+    compiled-stage caches."""
+    clip: Optional[float] = 2.0   # τ = clip × median‖Δ‖; None disables
+    pool: str = "mom"             # c-pooling over gradient columns:
+                                  #   "mean" | "mom" | "trimmed"
+    mom_buckets: int = 0          # 0 → auto: largest odd B <= J (a
+                                  #   straight column median)
+    trim_frac: float = 0.25       # per-side trim fraction for "trimmed"
+    krum_f: Optional[int] = None  # krum: assumed #byzantine (None → ⌈0.2K⌉)
+
+    def __post_init__(self):
+        if self.pool not in ("mean", "mom", "trimmed"):
+            raise ValueError(f"pool must be mean|mom|trimmed, got "
+                             f"'{self.pool}'")
+        if self.clip is not None and self.clip <= 0:
+            raise ValueError(f"clip must be positive or None, got {self.clip}")
+        if not (0.0 <= self.trim_frac < 0.5):
+            raise ValueError(f"trim_frac must be in [0, 0.5), got "
+                             f"{self.trim_frac}")
+        if self.mom_buckets < 0:
+            raise ValueError(f"mom_buckets must be >= 0, got "
+                             f"{self.mom_buckets}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.clip is not None or self.pool != "mean"
+
+
+def clip_scales(G: jax.Array, cfg: RobustConfig) -> jax.Array:
+    """Per-client clip scales from ``diag G`` alone: ``s_k = min(1, τ/‖Δ_k‖)``
+    with ``τ = clip × median ‖Δ‖``.  Ones when clipping is disabled."""
+    norms = jnp.sqrt(jnp.maximum(jnp.diag(G), 0.0))
+    if cfg.clip is None:
+        return jnp.ones_like(norms)
+    tau = cfg.clip * jnp.median(norms)
+    return jnp.minimum(1.0, tau / jnp.maximum(norms, _EPS))
+
+
+def pool_cross(C: jax.Array, w: jax.Array, cfg: RobustConfig) -> jax.Array:
+    """Robust row-pooling of the (K, J) cross matrix over gradient columns.
+
+    ``"mean"`` is the plain estimate ``C @ w`` (w = the ĝ mixing weights);
+    the robust pools assume near-uniform weights — true at the device tiers
+    where they are deployed (every participant reports one gradient) — and
+    estimate the row location ignoring up to their breakdown point of
+    poisoned columns.  Static shapes throughout (J is a trace-time int)."""
+    J = C.shape[1]
+    if cfg.pool == "mean" or J < 3:
+        return C @ w
+    if cfg.pool == "trimmed":
+        t = int(cfg.trim_frac * J)
+        if J - 2 * t < 1:
+            return C @ w
+        Cs = jnp.sort(C, axis=1)
+        return jnp.mean(Cs[:, t:J - t], axis=1)
+    # median-of-means over index buckets j % B (bucket membership must not
+    # depend on values, or an adaptive attacker chooses its bucket).  Auto B
+    # is the largest odd number <= J — singleton buckets, i.e. a straight
+    # column median: breakdown scales with B, and the variance reduction of
+    # larger buckets only pays off for J far beyond a round cohort's size.
+    # Odd keeps the median a true order statistic (an even-count median
+    # averages the two middle values, letting one poisoned bucket leak in
+    # right at the breakdown margin).
+    B = cfg.mom_buckets if cfg.mom_buckets > 0 else (J if J % 2 else J - 1)
+    B = min(B, J)
+    ids = jnp.arange(J) % B
+    sums = jnp.zeros((C.shape[0], B), C.dtype).at[:, ids].add(C)
+    cnts = jnp.zeros((B,), C.dtype).at[ids].add(1.0)
+    return jnp.median(sums / cnts, axis=1)
+
+
+def robustify(G: jax.Array, C: jax.Array, w: jax.Array, cfg: RobustConfig
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Robustified ``(G', c', s)`` for a contextual solve.
+
+    ``C`` is either the (K, J) cross matrix (rows: updates, columns:
+    per-client gradient reports — the pooling case) or an already-mixed
+    (K,) c vector (gradient pre-pass: only clipping applies).  ``w`` are
+    the ĝ mixing weights over columns.  The caller must combine with
+    ``α_eff = s ⊙ α`` so the applied step uses the clipped updates the
+    solve priced; with defenses off this is the exact identity
+    ``(G, C @ w, 1)``."""
+    s = clip_scales(G, cfg)
+    Gr = G * jnp.outer(s, s)
+    if C.ndim == 1:
+        return Gr, s * C, s
+    return Gr, pool_cross(s[:, None] * C, w, cfg), s

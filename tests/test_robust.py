@@ -1,0 +1,427 @@
+"""Tests for the adversarial & churn robustness suite (repro.robust):
+robust (G, c) statistics and their breakdown properties, attack models and
+stacked corruption, adversary placement / label poisoning, churn schedules
+layered on the event scheduler, the flat robust aggregators, and the
+end-to-end bounded-loss-inflation / determinism contracts across engines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (AggregatorConfig, aggregate,
+                                    available_aggregators)
+from repro.core.solve import SolveConfig
+from repro.edge import uniform_fleet
+from repro.edge.events import EventScheduler
+from repro.fl import run_hier_simulation, run_simulation
+from repro.fl.server import ServerConfig
+from repro.hier import HierConfig, star_topology, two_tier_topology
+from repro.models.logistic import logistic_apply, logistic_loss
+from repro.robust import (ByzantineGauss, ChurnSchedule, ChurnWave,
+                          LabelFlip, RobustConfig, assign_adversaries,
+                          available_attacks, churn_schedule, clip_scales,
+                          corrupt_stacked, get_attack, poison_labels,
+                          pool_cross, robustify)
+
+
+# ---------------------------------------------------------------------------
+# robust (G, c) statistics
+# ---------------------------------------------------------------------------
+
+def test_robust_config_validation():
+    with pytest.raises(ValueError, match="pool"):
+        RobustConfig(pool="bogus")
+    with pytest.raises(ValueError, match="clip"):
+        RobustConfig(clip=0.0)
+    with pytest.raises(ValueError, match="trim_frac"):
+        RobustConfig(trim_frac=0.5)
+    with pytest.raises(ValueError, match="mom_buckets"):
+        RobustConfig(mom_buckets=-1)
+    assert RobustConfig(clip=2.0, pool="mom").enabled
+    assert RobustConfig(clip=None, pool="trimmed").enabled
+    assert not RobustConfig(clip=None, pool="mean").enabled
+
+
+def test_robustify_identity_when_disabled():
+    """Breakdown-point anchor: defenses off → exact identity on (G, c)."""
+    key = jax.random.PRNGKey(0)
+    U = jax.random.normal(key, (6, 40))
+    Gm = jax.random.normal(jax.random.fold_in(key, 1), (6, 40))
+    G, C = U @ U.T, U @ Gm.T
+    w = jnp.full((6,), 1.0 / 6)
+    off = RobustConfig(clip=None, pool="mean")
+    Gr, cr, s = robustify(G, C, w, off)
+    np.testing.assert_array_equal(np.asarray(Gr), np.asarray(G))
+    np.testing.assert_array_equal(np.asarray(cr), np.asarray(C @ w))
+    np.testing.assert_array_equal(np.asarray(s), np.ones(6))
+    # premixed c vector (gradient pre-pass shape): clip-only path, same deal
+    Gr2, cr2, s2 = robustify(G, C @ w, w, off)
+    np.testing.assert_array_equal(np.asarray(cr2), np.asarray(C @ w))
+
+
+def test_clip_scales_damp_oversized_rows():
+    U = jnp.concatenate([jnp.ones((6, 10)),            # honest: norm sqrt(10)
+                         10.0 * jnp.ones((2, 10))])    # 10x rows
+    G = U @ U.T
+    s = np.asarray(clip_scales(G, RobustConfig(clip=2.0)))
+    np.testing.assert_allclose(s[:6], 1.0, atol=1e-6)
+    np.testing.assert_allclose(s[6:], 0.2, atol=1e-3)  # 2*median/10x
+    ones = clip_scales(G, RobustConfig(clip=None, pool="mom"))
+    np.testing.assert_array_equal(np.asarray(ones), np.ones(8))
+
+
+@pytest.mark.parametrize("pool", ["mom", "trimmed"])
+def test_pool_cross_resists_poisoned_columns(pool):
+    """f = 2/9 poisoned gradient columns: the plain mean is dragged far off,
+    the robust pools stay at the honest value (breakdown property)."""
+    K, J = 5, 9
+    C = jnp.ones((K, J)) * 3.0
+    C = C.at[:, 2].set(1e4).at[:, 6].set(4e3)         # poisoned columns
+    w = jnp.full((J,), 1.0 / J)
+    cfg = RobustConfig(clip=None, pool=pool)
+    est = np.asarray(pool_cross(C, w, cfg))
+    np.testing.assert_allclose(est, 3.0, atol=1e-3)
+    mean = np.asarray(C @ w)
+    assert np.all(np.abs(mean - 3.0) > 100.0)
+
+
+def test_pool_cross_small_j_falls_back_to_mean():
+    C = jnp.asarray([[1.0, 5.0]])
+    w = jnp.asarray([0.5, 0.5])
+    out = pool_cross(C, w, RobustConfig(pool="mom"))
+    np.testing.assert_allclose(np.asarray(out), [3.0])
+    # degenerate trim (would leave no columns) falls back too
+    out2 = pool_cross(jnp.ones((2, 3)), jnp.full((3,), 1 / 3),
+                      RobustConfig(pool="trimmed", trim_frac=0.4))
+    np.testing.assert_allclose(np.asarray(out2), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# flat robust aggregators
+# ---------------------------------------------------------------------------
+
+def _agg_problem(key, K=8, n=30, poisoned=()):
+    U = jax.random.normal(key, (K, n)) * 0.1
+    Gm = jax.random.normal(jax.random.fold_in(key, 1), (K, n)) * 0.1
+    for i in poisoned:
+        U = U.at[i].set(jax.random.normal(jax.random.fold_in(key, 10 + i),
+                                          (n,)) * 2.0)
+    params = {"w": jnp.zeros((n,))}
+    return params, {"w": U}, {"w": Gm}, U
+
+
+def test_robust_aggregators_registered():
+    names = available_aggregators()
+    for n in ("contextual_clipped", "contextual_mom", "krum",
+              "coordinate_median"):
+        assert n in names
+
+
+def test_krum_zeroes_outlier_updates():
+    params, stacked, grads, U = _agg_problem(jax.random.PRNGKey(3),
+                                             poisoned=(0, 5))
+    cfg = AggregatorConfig(name="krum", solve=SolveConfig(beta=5.0),
+                           robust=RobustConfig(krum_f=2))
+    _, info = aggregate("krum")(params, stacked, grads, cfg)
+    alpha = np.asarray(info["alpha"])
+    assert alpha[0] == 0.0 and alpha[5] == 0.0
+    np.testing.assert_allclose(alpha.sum(), 1.0, rtol=1e-6)
+
+
+def test_coordinate_median_matches_numpy():
+    params, stacked, grads, U = _agg_problem(jax.random.PRNGKey(4))
+    cfg = AggregatorConfig(name="coordinate_median",
+                           solve=SolveConfig(beta=5.0))
+    new, _ = aggregate("coordinate_median")(params, stacked, grads, cfg)
+    np.testing.assert_allclose(np.asarray(new["w"]),
+                               np.median(np.asarray(U), axis=0),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_contextual_mom_reports_clip_scales():
+    params, stacked, grads, _ = _agg_problem(jax.random.PRNGKey(5),
+                                             poisoned=(1,))
+    cfg = AggregatorConfig(name="contextual_mom", solve=SolveConfig(beta=5.0),
+                           robust=RobustConfig(clip=2.0, pool="mom"))
+    _, info = aggregate("contextual_mom")(params, stacked, grads, cfg)
+    s = np.asarray(info["clip_scale"])
+    assert s[1] < 0.5 and np.all(s <= 1.0 + 1e-6)
+    assert aggregate("contextual_mom").grad_stack is True
+
+
+# ---------------------------------------------------------------------------
+# attack models & stacked corruption
+# ---------------------------------------------------------------------------
+
+def test_attack_registry():
+    assert available_attacks() == ("byzantine_gauss", "label_flip",
+                                   "scaled_update", "sign_flip")
+    with pytest.raises(KeyError, match="unknown attack"):
+        get_attack("bogus")
+    assert get_attack("byzantine_gauss", scale=3.0).scale == 3.0
+    # label_flip is data poisoning: the update path is the identity
+    lf = LabelFlip()
+    d, g = {"w": jnp.ones(3)}, {"w": jnp.ones(3)}
+    d2, g2 = lf.corrupt(d, g, jax.random.PRNGKey(0))
+    assert d2 is d and g2 is g
+
+
+def test_corrupt_stacked_honest_rows_bit_identical():
+    key = jax.random.PRNGKey(7)
+    deltas = {"w": jax.random.normal(key, (6, 12))}
+    grads = {"w": jax.random.normal(jax.random.fold_in(key, 1), (6, 12))}
+    mask = jnp.asarray([False, True, False, False, True, False])
+    for name in ("byzantine_gauss", "sign_flip", "scaled_update"):
+        atk = get_attack(name)
+        cd, cg = corrupt_stacked(atk, deltas, grads, mask,
+                                 jax.random.PRNGKey(9))
+        for orig, new in ((deltas, cd), (grads, cg)):
+            o, nw = np.asarray(orig["w"]), np.asarray(new["w"])
+            np.testing.assert_array_equal(nw[~np.asarray(mask)],
+                                          o[~np.asarray(mask)])
+        assert not np.allclose(np.asarray(cd["w"])[1],
+                               np.asarray(deltas["w"])[1])
+    # scaled_update leaves the gradient report honest even on attacked rows
+    cd, cg = corrupt_stacked(get_attack("scaled_update", factor=5.0),
+                             deltas, grads, mask, jax.random.PRNGKey(9))
+    np.testing.assert_array_equal(np.asarray(cg["w"]),
+                                  np.asarray(grads["w"]))
+    np.testing.assert_allclose(np.asarray(cd["w"])[1],
+                               5.0 * np.asarray(deltas["w"])[1], rtol=1e-5)
+
+
+def test_assign_adversaries_and_poison_labels():
+    fleet = uniform_fleet(20)
+    f1 = assign_adversaries(fleet, 0.25, seed=5)
+    f2 = assign_adversaries(fleet, 0.25, seed=5)
+    assert f1.malicious == f2.malicious and len(f1.malicious) == 5
+    assert f1.malicious != assign_adversaries(fleet, 0.25, seed=6).malicious
+    assert assign_adversaries(fleet, 0.0).malicious == ()
+    with pytest.raises(ValueError, match="fraction"):
+        assign_adversaries(fleet, 1.0)
+    assert f1.is_malicious(f1.malicious[0])
+    with pytest.raises(ValueError, match="malicious"):
+        dataclasses.replace(fleet, malicious=(99,))
+
+    y = np.random.RandomState(0).randint(0, 10, size=(20, 6))
+    ds = type("D", (), {})()
+    from repro.data.federated import FederatedDataset
+    ds = FederatedDataset(np.zeros((20, 6, 3), np.float32), y,
+                          np.ones((20, 6), np.float32),
+                          np.zeros((4, 3), np.float32),
+                          np.arange(4) % 10, 10)
+    pd = poison_labels(ds, f1.malicious)
+    mal = np.asarray(f1.malicious)
+    np.testing.assert_array_equal(pd.y[mal], 9 - y[mal])
+    hon = np.setdiff1d(np.arange(20), mal)
+    np.testing.assert_array_equal(pd.y[hon], y[hon])
+    np.testing.assert_array_equal(pd.test_y, ds.test_y)   # test set clean
+    assert poison_labels(ds, ()) is ds
+
+
+# ---------------------------------------------------------------------------
+# churn schedules on the event scheduler
+# ---------------------------------------------------------------------------
+
+def test_churn_wave_validation_and_membership():
+    with pytest.raises(ValueError, match="fraction"):
+        ChurnWave(0.0, 1.0, 1.5)
+    with pytest.raises(ValueError, match="end"):
+        ChurnWave(2.0, 1.0, 0.5)
+    w = ChurnWave(10.0, 20.0, 0.5, seed=3)
+    assert w.active(10.0) and w.active(19.9)
+    assert not w.active(9.9) and not w.active(20.0)
+    sched = ChurnSchedule(10, (w,))
+    members = sched.members(0)
+    assert len(members) == 5
+    assert sched.members(0) == ChurnSchedule(10, (w,)).members(0)
+    for d in range(10):
+        assert sched.offline(d, 15.0) == (d in members)
+        assert not sched.offline(d, 25.0)                 # rejoined
+
+
+def test_churn_schedule_profiles():
+    for profile, frac in (("wave", 0.5), ("blackout", 0.9)):
+        sched = churn_schedule(profile, 20, 100.0, seed=1)
+        mid = sum(1 for t in np.linspace(0, 100, 201)
+                  if any(wv.active(t) for wv in sched.waves))
+        assert mid > 0
+        assert len(sched.members(0)) == int(round(frac * 20))
+    none = churn_schedule("none", 20, 100.0)
+    assert none.waves == ()
+    rolling = churn_schedule("rolling", 20, 100.0, seed=2)
+    assert len(rolling.waves) == 2
+    with pytest.raises(KeyError, match="churn profile"):
+        churn_schedule("bogus", 20, 100.0)
+
+
+def test_scheduler_churn_preserves_rng_stream():
+    """An empty schedule leaves the event trace bit-identical to churn=None
+    (the override only ever flips an outcome); an active wave forces
+    dropouts inside its window but leaves every dispatch *before* the wave
+    untouched, and the churned trace itself is deterministic."""
+    fleet = uniform_fleet(8, dropout=0.1)
+    kw = dict(flops_per_step=1e6, payload_bytes=1e4)
+
+    def trace(churn):
+        sch = EventScheduler(fleet, seed=3, churn=churn, **kw)
+        for t in range(6):
+            for d in range(8):
+                sch.dispatch(d, 5, version=t, at=float(t) * 10.0)
+            while sch.pop() is not None:
+                pass
+        return sch.trace_signature()
+
+    base = trace(None)
+    assert trace(churn_schedule("none", 8, 60.0)) == base
+    # blackout window is [12, 21): dispatches at t=0 and t=10 (seqs 0..15)
+    # consume RNG before any churn-affected dispatch — identical outcomes
+    black = churn_schedule("blackout", 8, 60.0, seed=1)
+    churned = trace(black)
+    assert churned != base
+    assert churned == trace(black)                    # deterministic
+    pre = [e for e in base if e[1] < 16]
+    pre_c = [e for e in churned if e[1] < 16]
+    assert pre == pre_c
+    # inside the window the wave's members all drop
+    members = black.members(0)
+    in_window = [e for e in churned
+                 if e[2] == 0 and 12.0 <= e[0] < 21.0 and e[3] in members]
+    assert in_window, "expected dispatches inside the blackout window"
+    terminal = {e[1]: e[2] for e in churned if e[2] != 0}
+    assert all(terminal[e[1]] == 2 for e in in_window)  # all DROPOUT
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: bounded loss inflation & determinism
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def robust_problem(tiny_edge_problem):
+    ds, params, _ = tiny_edge_problem
+    fleet = assign_adversaries(uniform_fleet(12), 0.17, seed=3)
+    return ds, params, fleet
+
+
+def _flat(ds, params, fleet, agg, attack=None, robust=None, rounds=8):
+    cfg = ServerConfig(aggregator=agg, num_devices=12, clients_per_round=8,
+                       lr=0.2, batch_size=10, max_epochs=4, attack=attack,
+                       malicious=fleet.malicious if attack else (),
+                       robust=robust)
+    r = run_simulation(agg, logistic_loss, logistic_apply, params, ds, cfg,
+                       num_rounds=rounds, eval_every=rounds)
+    return r.train_loss[-1]
+
+
+def test_flat_robust_matches_plain_when_disabled(robust_problem):
+    """f = 0 anchor: with defenses off the robust aggregator reproduces the
+    plain contextual trajectory (same math, different accumulation order)."""
+    ds, params, fleet = robust_problem
+    off = RobustConfig(clip=None, pool="mean")
+    plain = _flat(ds, params, fleet, "contextual", rounds=4)
+    rob = _flat(ds, params, fleet, "contextual_mom", robust=off, rounds=4)
+    np.testing.assert_allclose(rob, plain, rtol=1e-4)
+
+
+def test_flat_bounded_inflation_under_byzantine(robust_problem):
+    """Breakdown property end to end at f <= 20%: the robust contextual
+    solve's loss inflation stays bounded while FedAvg degrades markedly."""
+    ds, params, fleet = robust_problem
+    atk = ByzantineGauss(scale=10.0)
+    rob = RobustConfig(clip=2.0, pool="mom")
+    mom_clean = _flat(ds, params, fleet, "contextual_mom", robust=rob)
+    mom_atk = _flat(ds, params, fleet, "contextual_mom", atk, robust=rob)
+    fa_clean = _flat(ds, params, fleet, "fedavg")
+    fa_atk = _flat(ds, params, fleet, "fedavg", atk)
+    assert np.isfinite(mom_atk)
+    assert mom_atk <= 1.45 * mom_clean          # bounded inflation
+    assert fa_atk >= 1.8 * fa_clean             # undefended: marked damage
+    # non-contextual robust baselines also survive the same attack
+    for agg in ("krum", "coordinate_median"):
+        assert _flat(ds, params, fleet, agg, atk, rounds=4) < fa_atk
+
+
+def test_flat_label_flip_poisons_dataset_only(robust_problem):
+    ds, params, fleet = robust_problem
+    atk = get_attack("label_flip")
+    loss = _flat(ds, params, fleet, "contextual_mom", atk,
+                 robust=RobustConfig(clip=2.0, pool="mom"), rounds=3)
+    assert np.isfinite(loss)
+
+
+def _hier(ds, params, fleet, topo, engine, attack=None, churn=None,
+          robust=None, rounds=4, seed=11):
+    cfg = HierConfig(aggregator="hier_contextual", lr=0.2, batch_size=10,
+                     min_epochs=1, max_epochs=4, robust=robust)
+    return run_hier_simulation(f"rob-{engine}", logistic_loss, logistic_apply,
+                               params, ds, cfg, topo, num_rounds=rounds,
+                               selection_seed=seed, eval_every=2,
+                               engine=engine, attack=attack, churn=churn)
+
+
+def test_hier_robust_engine_parity_under_attack(robust_problem):
+    """Fused and streamed engines run the SAME robust tier math: identical
+    event traces and near-identical losses under attack + churn."""
+    ds, params, fleet = robust_problem
+    atk = ByzantineGauss(scale=10.0)
+    churn = churn_schedule("wave", 12, 40.0, seed=1)
+    rob = RobustConfig(clip=2.0, pool="mom")
+    topo = star_topology(fleet)
+    rf = _hier(ds, params, fleet, topo, "fused", atk, churn, rob)
+    rs = _hier(ds, params, fleet, topo, "streamed", atk, churn, rob)
+    assert rf.times == rs.times
+    np.testing.assert_allclose(rf.train_loss, rs.train_loss,
+                               rtol=5e-4, atol=5e-4)
+    assert np.isfinite(rf.train_loss).all()
+
+
+def test_hier_two_tier_robust_runs(robust_problem):
+    ds, params, fleet = robust_problem
+    atk = ByzantineGauss(scale=10.0)
+    topo = two_tier_topology(fleet, 3)
+    r = _hier(ds, params, fleet, topo, "fused", atk,
+              robust=RobustConfig(clip=2.0, pool="mom"), rounds=3)
+    assert np.isfinite(r.train_loss).all()
+
+
+def test_hier_config_robust_validation():
+    rob = RobustConfig(clip=2.0, pool="mom")
+    with pytest.raises(TypeError, match="RobustConfig"):
+        HierConfig(robust="clip")
+    with pytest.raises(ValueError, match="hier_contextual"):
+        HierConfig(aggregator="hier_fedavg", robust=rob)
+    with pytest.raises(ValueError, match="gateway_grad"):
+        HierConfig(gateway_grad="global", robust=rob)
+    assert HierConfig(robust=rob).robust is rob
+
+
+@pytest.mark.parametrize("engine", ["fused", "streamed"])
+def test_seeded_determinism_attack_churn(robust_problem, engine):
+    """Satellite: identical (fleet, attack, churn schedule, seed) reproduces
+    byte-identical event traces and final losses across two runs, on both
+    engines."""
+    ds, params, fleet = robust_problem
+    atk = ByzantineGauss(scale=10.0)
+    churn = churn_schedule("rolling", 12, 40.0, seed=2)
+    rob = RobustConfig(clip=2.0, pool="mom")
+    topo = star_topology(fleet)
+    r1 = _hier(ds, params, fleet, topo, engine, atk, churn, rob, rounds=3)
+    r2 = _hier(ds, params, fleet, topo, engine, atk, churn, rob, rounds=3)
+    assert r1.times == r2.times                       # byte-identical events
+    assert r1.train_loss == r2.train_loss             # bitwise-equal losses
+    assert (r1.dispatched, r1.arrived, r1.dropped) == \
+        (r2.dispatched, r2.arrived, r2.dropped)
+
+
+def test_attack_does_not_perturb_honest_rng(robust_problem):
+    """The adversary key derives by fold_in, so the clean and attacked runs
+    differ ONLY through the corrupted rows: with zero malicious devices an
+    attack config is inert and bit-identical to the clean run."""
+    ds, params, fleet = robust_problem
+    clean_fleet = assign_adversaries(uniform_fleet(12), 0.0)
+    atk = ByzantineGauss(scale=10.0)
+    a = _flat(ds, params, clean_fleet, "contextual", rounds=3)
+    b = _flat(ds, params, clean_fleet, "contextual", atk, rounds=3)
+    assert a == b
