@@ -39,7 +39,10 @@ from bench_trace import derive_bench_json  # noqa: E402
 # pick a different backend; the oracle_max_abs_err field is what gates
 # kernel correctness).
 IGNORE = ("round_time_s", "wall_time", "us_per_call", "time_end",
-          "selected", "candidates_timed", "ungated")
+          "selected", "candidates_timed", "ungated",
+          # fleet throughput / host-memory columns (machine-dependent);
+          # listed before the "devices" EXACT match below on purpose
+          "devices_per_s", "peak_rss")
 EXACT = ("bytes", "savings", "gateways", "devices", "rounds", "num_",
          "meets_")
 LOOSE_REL = 0.35        # losses / accs / virtual times across jax versions
@@ -48,7 +51,7 @@ EXACT_REL = 1e-6
 
 # numeric fields that are part of a record's identity, not metrics
 IDENTITY_NUM = ("ratio", "u_frac", "depth", "gateways", "fleet_slowdown",
-                "target_acc", "K", "n", "m", "k", "frac")
+                "fleet_size", "target_acc", "K", "n", "m", "k", "frac")
 
 
 def _classify(key: str):

@@ -6,6 +6,7 @@
   fig7    — aggregation-variable (α) statistics per stage (Fig. 7)
   async   — async edge runtime vs sync under straggler severity sweep
   hier    — hierarchical vs flat contextual: fan-in / tier-depth sweep
+  fleet   — fleet-scale rounds: 10³→10⁶ devices via cohort scheduling
   bigmodel— streamed big-model round engine: memory model + equivalence
   robust  — adversarial & churn sweep: robust contextual vs plain vs FedAvg
   kernels — Pallas hot-spot micro-benchmarks
@@ -31,8 +32,8 @@ def _registry():
     """name -> (module, kwargs_fn(quick) -> run kwargs, emits_json)."""
     from . import (async_vs_sync, bigmodel_round, compress_sweep,
                    fig2_3_k2_variants, fig4_5_algorithms,
-                   fig6_rounds_to_accuracy, fig7_alpha_stages, hier_vs_flat,
-                   kernel_bench, robust_suite, roofline_report)
+                   fig6_rounds_to_accuracy, fig7_alpha_stages, fleet_scale,
+                   hier_vs_flat, kernel_bench, robust_suite, roofline_report)
     return {
         "fig2_3": (fig2_3_k2_variants,
                    lambda q: dict(rounds=10 if q else 25), False),
@@ -46,6 +47,7 @@ def _registry():
                   lambda q: dict(rounds=12 if q else 30,
                                  aggs=12 if q else 30), True),
         "hier": (hier_vs_flat, lambda q: dict(rounds=8 if q else 20), True),
+        "fleet": (fleet_scale, lambda q: dict(rounds=3, quick=q), True),
         "bigmodel": (bigmodel_round,
                      lambda q: dict(rounds=8 if q else 16, quick=q), True),
         "compress": (compress_sweep,

@@ -32,9 +32,12 @@ from bench_trace import BenchFold, SPAN_RESERVED, span_fields  # noqa: E402
 # identity columns lead the table; metric columns follow in this order.
 # Only columns present in at least one record are rendered.
 IDENTITY_COLS = ("scenario", "topology", "method", "fleet_slowdown",
-                 "dataset", "op", "shape", "mode", "scheme", "ratio",
-                 "depth", "gateways", "attack", "frac", "churn")
-METRIC_COLS = ("final_loss", "final_loss_ungated", "inflation_ungated",
+                 "fleet_size", "dataset", "op", "shape", "mode", "scheme",
+                 "ratio", "depth", "gateways", "attack", "frac", "churn")
+METRIC_COLS = ("final_loss", "final_train_loss", "devices_per_round",
+               "devices_per_s", "warm_round_wall_time_ms", "peak_rss_mb",
+               "loss_gap_vs_event",
+               "final_loss_ungated", "inflation_ungated",
                "num_dropped", "final_acc", "best_acc",
                "virtual_time_to_target_s", "loss_gap_vs_flat",
                "loss_gap_vs_sync", "loss_gap_vs_dense",

@@ -1,0 +1,124 @@
+"""On-the-fly per-device data shards for fleet-scale simulation.
+
+A :class:`VirtualFleetDataset` never materializes the ``(N, m, dim)`` host
+array a :class:`~repro.data.federated.FederatedDataset` stores — at 10⁶
+devices that array alone is tens of GB.  Instead each device's shard is a
+pure counter-based function of ``(seed, device_id)``: the client-update jit
+boundary folds the device id into a PRNG key and generates the shard
+*inside* the compiled cohort pass, so host memory stays O(cohort chunk)
+regardless of fleet size.  The recipe mirrors Synthetic(α,β)
+(``make_synthetic``): per-device softmax-linear teachers ``W_k, b_k ~
+N(u_k, 1)`` with ``u_k ~ N(0, α)``, inputs ``x ~ N(v_k, Σ)`` with diagonal
+``Σ_jj = (j+1)^{-1.2}`` and ``v_k ~ N(B_k, 1), B_k ~ N(0, β)`` — drawn with
+``jax.random`` instead of the numpy generator, so it is the same *family*
+of problems, not bit-identical shards.
+
+Determinism: ``materialize()`` evaluates the identical generation function,
+so a materialized copy of device k equals the shard the jit boundary
+generates for device k bit-for-bit — the property the fleet-vs-64-device
+loss-equivalence test relies on.  The test set comes from held-out virtual
+device ids ``[N, N + test_devices)`` so no training shard leaks into eval.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .federated import FederatedDataset
+
+
+@dataclass(frozen=True, eq=False)
+class VirtualFleetDataset:
+    """Identity-hashed (``eq=False``) so compiled cohort functions cache per
+    dataset object, exactly like the loss-fn keys in the other jit caches."""
+    num_devices: int
+    samples_per_device: int = 16
+    dim: int = 16
+    num_classes: int = 4
+    alpha: float = 1.0
+    beta: float = 1.0
+    seed: int = 0
+    test_devices: int = 64
+
+    # run_hier_simulation dispatches on this instead of isinstance, so user
+    # subclasses / wrappers stay duck-compatible
+    virtual: bool = True
+
+    def __post_init__(self):
+        if self.num_devices < 1 or self.samples_per_device < 1:
+            raise ValueError("need at least one device and one sample")
+        if self.test_devices < 1:
+            raise ValueError("need at least one held-out test device")
+
+    def shard_fn(self) -> Callable[[jnp.ndarray], Tuple[jnp.ndarray,
+                                                        jnp.ndarray,
+                                                        jnp.ndarray]]:
+        """Pure jax function ``device_id -> (x (m, dim) f32, y (m,) i32,
+        mask (m,) f32)`` — traceable, vmappable, shard_map-able."""
+        m, dim, C = self.samples_per_device, self.dim, self.num_classes
+        alpha, beta = float(self.alpha), float(self.beta)
+        base = jax.random.PRNGKey(self.seed)
+        sigma = jnp.sqrt(jnp.arange(1, dim + 1, dtype=jnp.float32)
+                         ** jnp.float32(-1.2))
+
+        def shard(device_id):
+            key = jax.random.fold_in(base, device_id.astype(jnp.uint32))
+            k_u, k_w, k_b, k_B, k_v, k_x = jax.random.split(key, 6)
+            uk = alpha * jax.random.normal(k_u)
+            Wk = uk + jax.random.normal(k_w, (dim, C))
+            bk = uk + jax.random.normal(k_b, (C,))
+            Bk = beta * jax.random.normal(k_B)
+            vk = Bk + jax.random.normal(k_v, (dim,))
+            x = vk + sigma * jax.random.normal(k_x, (m, dim))
+            y = jnp.argmax(x @ Wk + bk, axis=1).astype(jnp.int32)
+            return x.astype(jnp.float32), y, jnp.ones((m,), jnp.float32)
+
+        return shard
+
+    def materialize_arrays(self, device_ids) -> Tuple[np.ndarray, np.ndarray,
+                                                      np.ndarray]:
+        """Host copies of the given devices' shards — the same bits the jit
+        boundary generates (one vmap of :meth:`shard_fn`)."""
+        ids = jnp.asarray(np.asarray(device_ids, np.int64))
+        x, y, mask = jax.vmap(self.shard_fn())(ids)
+        return np.asarray(x), np.asarray(y), np.asarray(mask)
+
+    def test_set(self) -> Tuple[np.ndarray, np.ndarray]:
+        ids = np.arange(self.num_devices,
+                        self.num_devices + self.test_devices, dtype=np.int64)
+        x, y, _ = self.materialize_arrays(ids)
+        return (x.reshape(-1, self.dim),
+                y.reshape(-1).astype(np.int32))
+
+    @property
+    def test_x(self) -> np.ndarray:
+        return self.test_set()[0]
+
+    @property
+    def test_y(self) -> np.ndarray:
+        return self.test_set()[1]
+
+    def materialize(self, device_ids: Optional[np.ndarray] = None
+                    ) -> FederatedDataset:
+        """A real :class:`FederatedDataset` holding (a subset of) the fleet —
+        the equivalence-test bridge between the virtual and materialized
+        paths.  Don't call this at 10⁶ devices; that is the point."""
+        if device_ids is None:
+            device_ids = np.arange(self.num_devices, dtype=np.int64)
+        x, y, mask = self.materialize_arrays(device_ids)
+        tx, ty = self.test_set()
+        return FederatedDataset(x, y, mask, tx, ty, self.num_classes)
+
+
+def eval_device_ids(num_devices: int, cap: int) -> np.ndarray:
+    """Deterministic evenly-strided device subsample for fleet-scale eval:
+    full coverage whenever the fleet fits the cap (so small-fleet losses are
+    exact), every stride-th device otherwise."""
+    if num_devices <= cap:
+        return np.arange(num_devices, dtype=np.int64)
+    stride = -(-num_devices // cap)          # ceil
+    return np.arange(num_devices, dtype=np.int64)[::stride][:cap]

@@ -15,9 +15,13 @@ against the same datasets/metrics as the synchronous path.
 from .async_server import (AsyncBuffer, AsyncConfig, BufferedUpdate,
                            aggregate_contextual_async, aggregate_fedbuff,
                            staleness_weight)
-from .events import Event, EventKind, EventScheduler, SchedulerStats
-from .profiles import (DeviceProfile, Fleet, bimodal_fleet, get_fleet,
-                       longtail_fleet, uniform_fleet)
+from .events import (BatchDispatch, Event, EventKind, EventScheduler,
+                     SchedulerStats)
+from .profiles import (ArrayFleet, DeviceProfile, Fleet, array_bimodal_fleet,
+                       array_longtail_fleet, array_uniform_fleet,
+                       as_array_fleet, bimodal_fleet, fleet_arrays,
+                       get_array_fleet, get_fleet, longtail_fleet,
+                       uniform_fleet)
 from .wallclock import (WallclockCurve, model_flops_per_step,
                         model_payload_bytes, sync_round_durations,
                         sync_wallclock_curve)
@@ -25,8 +29,10 @@ from .wallclock import (WallclockCurve, model_flops_per_step,
 __all__ = [
     "AsyncBuffer", "AsyncConfig", "BufferedUpdate",
     "aggregate_contextual_async", "aggregate_fedbuff", "staleness_weight",
-    "Event", "EventKind", "EventScheduler", "SchedulerStats",
-    "DeviceProfile", "Fleet", "bimodal_fleet", "get_fleet", "longtail_fleet",
-    "uniform_fleet", "WallclockCurve", "model_flops_per_step",
+    "BatchDispatch", "Event", "EventKind", "EventScheduler", "SchedulerStats",
+    "ArrayFleet", "DeviceProfile", "Fleet", "array_bimodal_fleet",
+    "array_longtail_fleet", "array_uniform_fleet", "as_array_fleet",
+    "bimodal_fleet", "fleet_arrays", "get_array_fleet", "get_fleet",
+    "longtail_fleet", "uniform_fleet", "WallclockCurve", "model_flops_per_step",
     "model_payload_bytes", "sync_round_durations", "sync_wallclock_curve",
 ]

@@ -57,13 +57,24 @@ Pytree = Any
 RecordHistory = Union[bool, int]
 
 
-def _history_push(hist: List, item: Any, record_history: RecordHistory
-                  ) -> None:
+def _history_buffer(record_history: RecordHistory):
+    """Backing store for a result's per-round history: a plain list when
+    unbounded (or disabled), a ``deque(maxlen=N)`` for a rolling window —
+    eviction is O(1) per append instead of the O(n) ``del hist[0]`` a list
+    pays, which at fleet-scale round counts dominated history upkeep."""
+    if record_history is True or record_history is False \
+            or record_history == 0:
+        return []
+    return deque(maxlen=int(record_history))
+
+
+def _history_push(hist, item: Any, record_history: RecordHistory) -> None:
     if record_history is False or record_history == 0:
         return
-    hist.append(item)
-    if record_history is not True and len(hist) > int(record_history):
-        del hist[0]
+    hist.append(item)      # deque(maxlen) evicts the oldest entry itself
+    if (record_history is not True and not isinstance(hist, deque)
+            and len(hist) > int(record_history)):
+        del hist[0]        # list fallback (caller skipped _history_buffer)
 
 
 def _vec_stats(prefix: str, v) -> Dict[str, float]:
@@ -92,18 +103,49 @@ def _client_update_fn(loss_fn: Callable, max_steps: int, batch_size: int,
 
 @lru_cache(maxsize=32)
 def _batched_client_update_fn(loss_fn: Callable, max_steps: int,
-                              batch_size: int, lr: float, mu: float
-                              ) -> Callable:
-    """Jitted vmapped cohort ``client_update`` (hierarchical runtime)."""
+                              batch_size: int, lr: float, mu: float,
+                              mesh=None) -> Callable:
+    """Jitted vmapped cohort ``client_update`` (hierarchical runtime).  A
+    mesh with a ``'fleet'`` axis shard_maps the cohort over it (params
+    replicated, per-device rows split)."""
     upd = partial(client_update, loss_fn, max_steps=max_steps,
                   batch_size=batch_size, lr=lr, mu=mu)
 
-    @jax.jit
-    def batch_update(params, xs, ys, ms, ns, keys):
+    def cohort(params, xs, ys, ms, ns, keys):
         return jax.vmap(lambda xx, yy, mm, n, k: upd(params, xx, yy, mm, n, k)
                         )(xs, ys, ms, ns, keys)
 
-    return batch_update
+    if mesh is not None and "fleet" in mesh.shape:
+        from ..sharding.specs import shard_cohort_fn
+        return shard_cohort_fn(mesh, cohort, num_stacked_args=5)
+    return jax.jit(cohort)
+
+
+@lru_cache(maxsize=16)
+def _batched_virtual_update_fn(loss_fn: Callable, max_steps: int,
+                               batch_size: int, lr: float, mu: float,
+                               dataset, mesh=None) -> Callable:
+    """Jitted vmapped cohort ``client_update`` over a
+    :class:`~repro.data.fleetgen.VirtualFleetDataset`: each device's shard is
+    generated *inside* the jit boundary from its id (counter-based PRNG
+    fold-in), so a fleet-scale cohort never materializes an (N, m, dim) host
+    array.  ``dataset`` is identity-hashed (frozen, ``eq=False``).  A mesh
+    with a ``'fleet'`` axis shard_maps the cohort over it — shard
+    generation *and* training both run device-parallel."""
+    shard = dataset.shard_fn()
+    upd = partial(client_update, loss_fn, max_steps=max_steps,
+                  batch_size=batch_size, lr=lr, mu=mu)
+
+    def cohort(params, dev_ids, ns, keys):
+        def one(d, n, k):
+            xx, yy, mm = shard(d)
+            return upd(params, xx, yy, mm, n, k)
+        return jax.vmap(one)(dev_ids, ns, keys)
+
+    if mesh is not None and "fleet" in mesh.shape:
+        from ..sharding.specs import shard_cohort_fn
+        return shard_cohort_fn(mesh, cohort, num_stacked_args=3)
+    return jax.jit(cohort)
 
 
 @lru_cache(maxsize=32)
@@ -165,6 +207,7 @@ def run_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         tr.jot(runtime="sync", run=name, aggregator=cfg.aggregator,
                num_rounds=num_rounds)
     result = SimulationResult(name=name)
+    result.alpha_history = _history_buffer(record_history)
     t0 = time.time()
     for t in range(num_rounds):
         with spans.span("round", round=t):
@@ -320,6 +363,7 @@ def run_async_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                buffer_size=cfg.buffer_size)
     result = AsyncSimulationResult(
         name=name, updates_per_device=np.zeros(fleet.num_devices, np.int64))
+    result.alpha_history = _history_buffer(record_history)
     max_events = 1000 + 50 * num_aggregations * cfg.buffer_size
     aggs = 0
     events_processed = 0
@@ -440,7 +484,11 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                         stream_chunk: Optional[int] = None,
                         mesh=None,
                         record_history: RecordHistory = True,
-                        attack=None, churn=None
+                        attack=None, churn=None,
+                        scheduler_mode: str = "auto",
+                        rng_stream: str = "v1",
+                        eval_device_cap: int = 4096,
+                        cohort_chunk: Optional[int] = None
                         ) -> HierSimulationResult:
     """Synchronous rounds over a multi-tier topology (``cfg`` is a
     :class:`repro.hier.HierConfig`, ``topology`` a :class:`repro.hier.Topology`).
@@ -463,7 +511,36 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     (default): streamed when the dense footprint 2·P·n·4 bytes would exceed
     ``REPRO_DENSE_ROUND_BYTES`` (default 1 GiB).  Device-uplink compression
     needs the dense matrices and forces the fused engine.  ``stream_chunk``
-    / ``mesh`` are forwarded to the streamed engine.
+    / ``mesh`` are forwarded to the streamed engine; a mesh with a
+    ``'fleet'`` axis additionally shard_maps the cohort client update over
+    it (params replicated, per-device rows split — see
+    :func:`repro.sharding.specs.shard_cohort_fn`) and row-shards the
+    streamed engine's (P, n) statistics pass
+    (:func:`repro.sharding.specs.stream_round_shardings`).
+
+    Fleet scale.  ``topology`` may be a :class:`repro.hier.StackedTopology`
+    (array-native, no per-device nodes) and ``dataset`` a
+    :class:`repro.data.VirtualFleetDataset` (shards generated inside the jit
+    boundary from device ids; ``cohort_chunk`` bounds the in-jit shard
+    buffer, ``eval_device_cap`` caps the materialized eval subsample — full
+    coverage when the fleet fits the cap).  ``scheduler_mode``:
+
+      * ``"event"``  — the per-device event path above;
+      * ``"cohort"`` — no per-device Event objects at all: one vectorized
+        batch dispatch, per-gateway completion = max member terminal time,
+        gateways processed in completion order, backhaul transfers drained
+        as events.  Virtual times and results match the event path exactly
+        on two-tier trees (the cloud fires only after every gateway; on
+        deeper trees transfer tie-breaking at *exactly* equal times may
+        order seq numbers differently).  Incompatible with
+        ``CompressConfig(device_uplink=True)`` (per-arrival error feedback
+        needs per-device events);
+      * ``"auto"``   — cohort from 4096 participants per round, else event.
+
+    ``rng_stream`` picks the scheduler's RNG universe (``"v1"`` legacy
+    sequential draws, ``"v2"`` counter-based — see
+    :class:`repro.edge.EventScheduler`); both are deterministic, v2 is the
+    one whose batch dispatch vectorizes.
     """
     # Imported lazily: repro.hier imports repro.edge which imports repro.fl,
     # so the reverse edge must not exist at import time.
@@ -478,6 +555,7 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     from ..hier.streamed import StreamedRoundEngine, dense_round_bytes
 
     fleet = topology.fleet
+    virtual = bool(getattr(dataset, "virtual", False))
     if dataset.num_devices < fleet.num_devices:
         raise ValueError(f"dataset has {dataset.num_devices} device shards, "
                          f"topology needs {fleet.num_devices}")
@@ -487,6 +565,11 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     # local training, with a key stream independent of the honest fold_ins
     malicious = np.asarray(sorted(getattr(fleet, "malicious", ())), np.int64)
     if attack is not None and attack.corrupts_data and malicious.size:
+        if virtual:
+            raise ValueError(
+                "data-poisoning attacks need materialized shards; a "
+                "VirtualFleetDataset generates data inside the jit boundary "
+                "(materialize() a subset, or use an update-space attack)")
         from ..robust.attacks import poison_labels
         dataset = poison_labels(dataset, malicious)
     live_attack = (attack if attack is not None
@@ -494,21 +577,36 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
 
     steps_per_epoch = max(dataset.samples_per_device // cfg.batch_size, 1)
     max_steps = cfg.max_epochs * steps_per_epoch
-    batch_update = _batched_client_update_fn(loss_fn, max_steps,
-                                             cfg.batch_size, cfg.lr, cfg.mu)
-
     params = jax.tree_util.tree_map(jnp.asarray, init_params)
-    x = jnp.asarray(dataset.x)
-    y = jnp.asarray(dataset.y)
-    mask = jnp.asarray(dataset.mask)
-    test_x, test_y = jnp.asarray(dataset.test_x), jnp.asarray(dataset.test_y)
+    if virtual:
+        batch_update = _batched_virtual_update_fn(
+            loss_fn, max_steps, cfg.batch_size, cfg.lr, cfg.mu, dataset,
+            mesh)
+        # eval over a capped, evenly-strided materialized device subsample:
+        # exact global loss whenever the fleet fits the cap (the fleet-vs-64
+        # equivalence scenario), an unbiased O(cap) estimate beyond it
+        from ..data.fleetgen import eval_device_ids
+        ex, ey, em = dataset.materialize_arrays(
+            eval_device_ids(fleet.num_devices, eval_device_cap))
+        x, y, mask = jnp.asarray(ex), jnp.asarray(ey), jnp.asarray(em)
+        tx, ty = dataset.test_set()
+        test_x, test_y = jnp.asarray(tx), jnp.asarray(ty)
+    else:
+        batch_update = _batched_client_update_fn(loss_fn, max_steps,
+                                                 cfg.batch_size, cfg.lr,
+                                                 cfg.mu, mesh)
+        x = jnp.asarray(dataset.x)
+        y = jnp.asarray(dataset.y)
+        mask = jnp.asarray(dataset.mask)
+        test_x, test_y = (jnp.asarray(dataset.test_x),
+                          jnp.asarray(dataset.test_y))
 
     n_model = sum(l.size for l in jax.tree_util.tree_leaves(params))
     mbytes = model_payload_bytes(params)
     scheduler = EventScheduler(
         fleet, seed=selection_seed,
         flops_per_step=model_flops_per_step(params, cfg.batch_size),
-        payload_bytes=mbytes, churn=churn)
+        payload_bytes=mbytes, churn=churn, rng_stream=rng_stream)
     tr = current_tracker().scope(f"hier/{name}")
     if tr.active:
         tr.jot(runtime="hier", run=name, aggregator=cfg.aggregator,
@@ -545,6 +643,17 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         budget = float(os.environ.get("REPRO_DENSE_ROUND_BYTES", 1 << 30))
         engine = ("fused" if device_decodes or dense_bytes <= budget
                   else "streamed")
+    if scheduler_mode not in ("auto", "event", "cohort"):
+        raise ValueError(f"unknown scheduler_mode '{scheduler_mode}' "
+                         "(auto|event|cohort)")
+    cohort_mode = (scheduler_mode == "cohort"
+                   or (scheduler_mode == "auto" and P_round >= 4096))
+    if cohort_mode and device_decodes:
+        if scheduler_mode == "cohort":
+            raise ValueError("scheduler_mode='cohort' is incompatible with "
+                             "CompressConfig(device_uplink=True): per-arrival "
+                             "error feedback needs per-device events")
+        cohort_mode = False
     robust_cfg = getattr(cfg, "robust", None)
     if engine == "streamed":
         eng = StreamedRoundEngine(params, solve_cfg, tier_mode,
@@ -584,6 +693,7 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
         return list(reversed(path))         # cloud-side hop first
 
     result = HierSimulationResult(name=name)
+    result.gamma_history = _history_buffer(record_history)
     round_walls: List[float] = []
     t0 = time.time()
     with spans.use_virtual_clock(lambda: scheduler.now):
@@ -591,45 +701,76 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
             with spans.span("round", round=t):
                 round_t0 = time.perf_counter()
                 round_start = scheduler.now
-                # -- selection (identical-selection protocol: one shared RNG) -------
-                participants: List[tuple] = []      # (device_id, gateway_id)
+                # -- selection (identical-selection protocol: one shared RNG).
+                # The cohort is flat arrays: per-gateway contiguous blocks of
+                # participant rows (part_dev), O(gateways) Python + vectorized
+                # numpy — no per-device tuples/dicts at any fleet size.
+                groups: List[np.ndarray] = []
                 for gw in gateways:
-                    devs = np.asarray(gw.children)
+                    devs = np.asarray(gw.children, np.int64)
                     if cfg.fan_in is not None and cfg.fan_in < len(devs):
                         devs = np.sort(sel_rng.choice(devs, cfg.fan_in,
                                                       replace=False))
-                    participants.extend((int(d), gw.node_id) for d in devs)
+                    groups.append(devs)
+                gw_sizes = np.asarray([len(g) for g in groups], np.int64)
+                gw_start = np.zeros(len(groups), np.int64)
+                np.cumsum(gw_sizes[:-1], out=gw_start[1:])
+                part_dev = np.concatenate(groups)
+                P = int(part_dev.size)
                 epochs = sel_rng.randint(cfg.min_epochs, cfg.max_epochs + 1,
-                                         size=len(participants))
+                                         size=P)
                 num_steps = (epochs * steps_per_epoch).astype(np.int32)
-                P = len(participants)
 
                 # -- downlink broadcast, then dispatch at each gateway's model-arrival
-                down_delay = {}
-                for gw in gateways:
+                down_delay = np.zeros(len(gateways))
+                for gi, gw in enumerate(gateways):
                     delay = 0.0
                     for hop in broadcast_path(gw):
                         dl = hop.uplink.downlink_time(mbytes)
                         ledger.record_down(hop.tier, mbytes, dl)
                         delay += dl
-                    down_delay[gw.node_id] = delay
-                for (dev, gid), ns in zip(participants, num_steps):
-                    ledger.record_down(0, mbytes)   # device model fetch (profile-timed)
-                    scheduler.dispatch(dev, int(ns), version=t,
-                                       at=round_start + down_delay[gid])
+                    down_delay[gi] = delay
+                # one batched model-fetch record + one batched dispatch for
+                # the whole cohort (same draws/trace as the per-device loop
+                # under v1; see EventScheduler.dispatch_batch)
+                ledger.record_down(0, mbytes, count=P)
+                batch = scheduler.dispatch_batch(
+                    part_dev, num_steps, version=t,
+                    at=round_start + np.repeat(down_delay, gw_sizes),
+                    enqueue=not cohort_mode)
 
                 # -- local training for the whole cohort (vmap, one compile) --------
-                sel = jnp.asarray(np.array([d for d, _ in participants]))
                 keys = jax.vmap(jax.random.fold_in, (None, 0))(
                     base_key, jnp.arange(t * P, (t + 1) * P, dtype=jnp.uint32))
+                ns_j = jnp.asarray(num_steps)
                 with spans.span("client_update", participants=P):
-                    deltas, grads = batch_update(params, x[sel], y[sel],
-                                                 mask[sel],
-                                                 jnp.asarray(num_steps), keys)
+                    if virtual:
+                        dev_j = jnp.asarray(part_dev)
+                        if cohort_chunk is None or P <= cohort_chunk:
+                            deltas, grads = batch_update(params, dev_j, ns_j,
+                                                         keys)
+                        else:
+                            # chunked: bounds the in-jit generated
+                            # (chunk, m, dim) shard buffers at fleet scale
+                            # (at most two compiled shapes: chunk, remainder)
+                            cc = int(cohort_chunk)
+                            parts = [batch_update(params, dev_j[s:s + cc],
+                                                  ns_j[s:s + cc],
+                                                  keys[s:s + cc])
+                                     for s in range(0, P, cc)]
+                            deltas = jax.tree_util.tree_map(
+                                lambda *c: jnp.concatenate(c),
+                                *[p[0] for p in parts])
+                            grads = jax.tree_util.tree_map(
+                                lambda *c: jnp.concatenate(c),
+                                *[p[1] for p in parts])
+                    else:
+                        sel = jnp.asarray(part_dev)
+                        deltas, grads = batch_update(params, x[sel], y[sel],
+                                                     mask[sel], ns_j, keys)
                 if live_attack is not None:
                     from ..robust.attacks import corrupt_stacked_jit
-                    mal_mask = jnp.asarray(np.isin(
-                        np.array([d for d, _ in participants]), malicious))
+                    mal_mask = jnp.asarray(np.isin(part_dev, malicious))
                     if bool(np.any(np.asarray(mal_mask))):
                         akey = jax.random.fold_in(
                             jax.random.PRNGKey(selection_seed + 7919), t)
@@ -653,13 +794,9 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                 # gateway cohort is a skewed sample of a non-IID fleet, and a solve
                 # against the skewed local ĝ misweights the whole cohort in a way
                 # the parent's γ rescale cannot repair.
-                gw_of = {d: g for d, g in participants}
-                idx_of = {d: i for i, (d, _) in enumerate(participants)}
                 use_prepass = (topology.depth >= 2 and not relay
                                and tier_mode == "contextual"
                                and cfg.gateway_grad == "global")
-                out_dev = {gw.node_id: sum(1 for _, g in participants
-                                           if g == gw.node_id) for gw in gateways}
                 interior = [n for tier in range(2, topology.depth + 1)
                             for n in topology.tier_nodes(tier)]
                 out_grad = {n.node_id: len(n.children) for n in interior}
@@ -667,12 +804,20 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                 recv_grad: Dict[int, list] = {n.node_id: [] for n in interior}
                 recv_sum: Dict[int, list] = {n.node_id: [] for n in interior}
                 node_ghat: Dict[int, Pytree] = {}
-                survivors: Dict[int, List[int]] = {gw.node_id: [] for gw in gateways}
-                gw_idxs: Dict[int, List[int]] = {}
+                gw_idxs: Dict[int, np.ndarray] = {}
                 meta: Dict[int, tuple] = {}          # event seq -> (kind, node, payload)
                 ghat_global = None
                 cloud_done = False
                 round_info: Dict[str, Any] = {}
+                if not cohort_mode:
+                    # device id -> cohort row / gateway index, as flat arrays
+                    idx_of = np.full(fleet.num_devices, -1, np.int64)
+                    idx_of[part_dev] = np.arange(P)
+                    part_gw = np.repeat(np.arange(len(gateways)), gw_sizes)
+                    out_dev = {gw.node_id: int(gw_sizes[gi])
+                               for gi, gw in enumerate(gateways)}
+                    survivors: Dict[int, List[int]] = {
+                        gw.node_id: [] for gw in gateways}
 
                 def send_up(kind, node, payload, nbytes):
                     parent = topology.nodes[node.parent]
@@ -696,20 +841,20 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                     if out_map[pid] == 0:
                         complete_fn(pid)
 
-                def gateway_done(gid):
+                def gateway_done(gid, idxs):
                     node = topology.nodes[gid]
-                    idxs = sorted(survivors[gid])    # stable participant order
+                    idxs = np.sort(np.asarray(idxs, np.int64))  # stable order
                     gw_idxs[gid] = idxs
                     if node.parent is None:          # star: the cloud is the gateway
-                        finish_cloud(list(idxs) if idxs else None)
+                        finish_cloud(idxs.tolist() if idxs.size else None)
                         return
-                    if not idxs:
+                    if not idxs.size:
                         if use_prepass:
                             gone_up(gid, out_grad, on_grad_complete)
                         gone_up(gid, out_sum, on_sum_complete)
                         return
                     if relay:
-                        send_up("summary", node, list(idxs),
+                        send_up("summary", node, idxs.tolist(),
                                 len(idxs) * update_bytes(n_model))
                     elif use_prepass:
                         ghat_g = ctx.mean_grad(idxs)
@@ -737,8 +882,7 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                                           pool_scale=pool_scale)
                     return GatewaySummary(
                         node_id=gid, num_updates=len(idxs),
-                        member_ids=np.asarray([participants[i][0] for i in idxs],
-                                              np.int64),
+                        member_ids=part_dev[np.asarray(idxs, np.int64)],
                         G=out["G"], c=out["c"], alpha=out["alpha"],
                         u_bar=out["u_bar"], grad_est=out["ghat"], info=out["info"])
 
@@ -882,63 +1026,101 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                                                       cfg.smoothness))
                     return delta, info
 
-                max_events = 8 * (P + len(topology.nodes)) + 64
-                with spans.span("event_loop"):
-                    for _ in range(max_events):
-                        if cloud_done:
-                            break
-                        evt = scheduler.pop()
-                        if evt is None:
-                            raise RuntimeError(f"round {t}: event queue exhausted before "
-                                               "the cloud completed")
-                        if evt.seq in meta:              # backhaul transfer arrival
-                            kind, sender, payload = meta.pop(evt.seq)
-                            if kind == "grad":
-                                pid = topology.nodes[sender].parent
-                                recv_grad[pid].append((sender,) + payload)
-                                out_grad[pid] -= 1
-                                if out_grad[pid] == 0:
-                                    on_grad_complete(pid)
-                            elif kind == "ghat":
-                                on_ghat(sender, payload)
-                            else:                        # summary
-                                pid = topology.nodes[sender].parent
-                                recv_sum[pid].append(payload)
-                                out_sum[pid] -= 1
-                                if out_sum[pid] == 0:
-                                    on_sum_complete(pid)
-                        else:                            # device terminal event
-                            gid = gw_of[evt.device_id]
-                            if evt.kind == EventKind.ARRIVAL:
-                                survivors[gid].append(idx_of[evt.device_id])
-                                result.arrived += 1
-                                if compressing and compress_devices:
-                                    # per-device error feedback: the residual of every
-                                    # round a device DID report persists on-device.
-                                    # BOTH streams compress — the solves downstream
-                                    # consume the gradient too, so an upload that only
-                                    # shipped the update would be under-priced.  The
-                                    # decoded rows enter the round context as ONE
-                                    # gathered array update per cohort (fused engine;
-                                    # the streamed engine defers to it for this config).
-                                    i = idx_of[evt.device_id]
-                                    comp_d, vhat = ef.step(
-                                        ("dev", evt.device_id), ctx.D[i], comp_u_c,
-                                        seed=t)
-                                    comp_dg, ghat = ef.step(
-                                        ("devg", evt.device_id), ctx.GM[i], comp_g_c,
-                                        seed=t)
-                                    ctx.add_decoded_row(i, vhat, ghat)
-                                    ledger.record_up(topology.nodes[gid].tier,
-                                                     comp_d.nbytes + comp_dg.nbytes)
+                def on_transfer(kind, sender, payload):
+                    if kind == "grad":
+                        pid = topology.nodes[sender].parent
+                        recv_grad[pid].append((sender,) + payload)
+                        out_grad[pid] -= 1
+                        if out_grad[pid] == 0:
+                            on_grad_complete(pid)
+                    elif kind == "ghat":
+                        on_ghat(sender, payload)
+                    else:                        # summary
+                        pid = topology.nodes[sender].parent
+                        recv_sum[pid].append(payload)
+                        out_sum[pid] -= 1
+                        if out_sum[pid] == 0:
+                            on_sum_complete(pid)
+
+                if cohort_mode:
+                    # -- cohort device phase: zero per-device Event objects.
+                    # Every gateway completes at its members' max terminal
+                    # time (dropouts still gate — the timeout model); walk
+                    # gateways in completion order, settle each cohort block
+                    # vectorized, then drain the backhaul transfers as
+                    # events.  The clock may legitimately rewind while
+                    # draining transfers scheduled by earlier gateways.
+                    max_events = 8 * len(topology.nodes) + 64
+                    with spans.span("event_loop"):
+                        t_complete = np.maximum.reduceat(batch.t_end, gw_start)
+                        for gi in np.argsort(t_complete, kind="stable"):
+                            scheduler.advance_to(float(t_complete[gi]))
+                            s = int(gw_start[gi])
+                            e = s + int(gw_sizes[gi])
+                            alive = s + np.flatnonzero(~batch.dropped[s:e])
+                            result.arrived += int(alive.size)
+                            result.dropped += e - s - int(alive.size)
+                            gid = gateways[int(gi)].node_id
+                            ledger.record_up(topology.nodes[gid].tier,
+                                             update_bytes(n_model),
+                                             count=int(alive.size))
+                            gateway_done(gid, alive)
+                        scheduler.complete_batch(batch)
+                        for _ in range(max_events):
+                            if cloud_done:
+                                break
+                            evt = scheduler.pop()
+                            if evt is None or evt.seq not in meta:
+                                raise RuntimeError(
+                                    f"round {t}: non-transfer event in the "
+                                    "cohort drain")
+                            on_transfer(*meta.pop(evt.seq))
+                else:
+                    max_events = 8 * (P + len(topology.nodes)) + 64
+                    with spans.span("event_loop"):
+                        for _ in range(max_events):
+                            if cloud_done:
+                                break
+                            evt = scheduler.pop()
+                            if evt is None:
+                                raise RuntimeError(f"round {t}: event queue "
+                                                   "exhausted before the "
+                                                   "cloud completed")
+                            if evt.seq in meta:      # backhaul transfer arrival
+                                on_transfer(*meta.pop(evt.seq))
+                            else:                    # device terminal event
+                                pi = int(idx_of[evt.device_id])
+                                gid = gateways[int(part_gw[pi])].node_id
+                                if evt.kind == EventKind.ARRIVAL:
+                                    survivors[gid].append(pi)
+                                    result.arrived += 1
+                                    if compressing and compress_devices:
+                                        # per-device error feedback: the residual of every
+                                        # round a device DID report persists on-device.
+                                        # BOTH streams compress — the solves downstream
+                                        # consume the gradient too, so an upload that only
+                                        # shipped the update would be under-priced.  The
+                                        # decoded rows enter the round context as ONE
+                                        # gathered array update per cohort (fused engine;
+                                        # the streamed engine defers to it for this config).
+                                        comp_d, vhat = ef.step(
+                                            ("dev", evt.device_id), ctx.D[pi],
+                                            comp_u_c, seed=t)
+                                        comp_dg, ghat = ef.step(
+                                            ("devg", evt.device_id), ctx.GM[pi],
+                                            comp_g_c, seed=t)
+                                        ctx.add_decoded_row(pi, vhat, ghat)
+                                        ledger.record_up(
+                                            topology.nodes[gid].tier,
+                                            comp_d.nbytes + comp_dg.nbytes)
+                                    else:
+                                        ledger.record_up(topology.nodes[gid].tier,
+                                                         update_bytes(n_model))
                                 else:
-                                    ledger.record_up(topology.nodes[gid].tier,
-                                                     update_bytes(n_model))
-                            else:
-                                result.dropped += 1
-                            out_dev[gid] -= 1
-                            if out_dev[gid] == 0:
-                                gateway_done(gid)
+                                    result.dropped += 1
+                                out_dev[gid] -= 1
+                                if out_dev[gid] == 0:
+                                    gateway_done(gid, survivors[gid])
                 if not cloud_done:
                     raise RuntimeError(f"round {t}: exceeded {max_events} events")
                 result.dispatched += P

@@ -34,8 +34,9 @@ from .hier_server import (HierConfig, aggregate_hier_contextual,
                           aggregate_hier_fedavg, blockdiag_diagnostics,
                           cloud_aggregate)
 from .streamed import RowMix, StreamedRoundEngine, dense_round_bytes
-from .topology import (Link, TopoNode, Topology, geo_partitioned_topology,
-                       get_topology, star_topology, two_tier_topology)
+from .topology import (Link, StackedTopology, TopoNode, Topology,
+                       geo_partitioned_topology, get_topology, stacked_two_tier,
+                       star_topology, two_tier_topology)
 
 __all__ = [
     "RowMix", "StreamedRoundEngine", "dense_round_bytes",
@@ -46,6 +47,7 @@ __all__ = [
     "HierConfig", "aggregate_hier_contextual",
     "aggregate_hier_contextual_sketch", "aggregate_hier_fedavg",
     "blockdiag_diagnostics", "cloud_aggregate",
-    "Link", "TopoNode", "Topology", "geo_partitioned_topology",
-    "get_topology", "star_topology", "two_tier_topology",
+    "Link", "StackedTopology", "TopoNode", "Topology",
+    "geo_partitioned_topology", "get_topology", "stacked_two_tier",
+    "star_topology", "two_tier_topology",
 ]

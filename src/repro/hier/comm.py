@@ -93,9 +93,11 @@ class CommLedger:
         self._clock = clock
 
     def _stream(self, tier: int, direction: str, nbytes: float,
-                seconds: float) -> None:
+                seconds: float, count: int = 1) -> None:
         event = {"tier": tier, "dir": direction, "bytes": nbytes,
                  "link_seconds": seconds}
+        if count != 1:
+            event["count"] = count
         if self._clock is not None:
             now = self._clock()
             event["t_virtual"] = now
@@ -107,22 +109,31 @@ class CommLedger:
                             dur_virtual_s=seconds, tier=tier, bytes=nbytes)
         self._tracker.log(event)
 
-    def record_up(self, tier: int, nbytes: float, seconds: float = 0.0) -> None:
+    def record_up(self, tier: int, nbytes: float, seconds: float = 0.0,
+                  count: int = 1) -> None:
+        """Record ``count`` identical transfers in one call (the fleet-scale
+        cohort path accounts a whole tier's device traffic at once; totals
+        equal ``count`` single-record calls, streamed as one event carrying
+        the summed bytes)."""
+        if count == 0:
+            return
         tt = self.tiers[tier]
-        tt.bytes_up += nbytes
-        tt.transfers_up += 1
-        tt.link_seconds += seconds
+        tt.bytes_up += nbytes * count
+        tt.transfers_up += count
+        tt.link_seconds += seconds * count
         if self._tracker is not None and self._tracker.active:
-            self._stream(tier, "up", nbytes, seconds)
+            self._stream(tier, "up", nbytes * count, seconds * count, count)
 
-    def record_down(self, tier: int, nbytes: float,
-                    seconds: float = 0.0) -> None:
+    def record_down(self, tier: int, nbytes: float, seconds: float = 0.0,
+                    count: int = 1) -> None:
+        if count == 0:
+            return
         tt = self.tiers[tier]
-        tt.bytes_down += nbytes
-        tt.transfers_down += 1
-        tt.link_seconds += seconds
+        tt.bytes_down += nbytes * count
+        tt.transfers_down += count
+        tt.link_seconds += seconds * count
         if self._tracker is not None and self._tracker.active:
-            self._stream(tier, "down", nbytes, seconds)
+            self._stream(tier, "down", nbytes * count, seconds * count, count)
 
     @property
     def cloud_uplink_bytes(self) -> float:

@@ -342,7 +342,9 @@ class StreamedRoundEngine:
     """Drop-in peer of :class:`repro.hier.fused.HierRoundEngine`: same
     constructor signature plus ``chunk`` (column-chunk size, also the
     ``stream_stats`` autotune knob) and ``mesh`` (shard the chunk axis over
-    a ``jax.sharding.Mesh`` when one is available)."""
+    a ``jax.sharding.Mesh`` when one is available; a ``'fleet'`` mesh axis
+    additionally shards the leading P device axis of the round matrices —
+    see :func:`repro.sharding.specs.stream_round_shardings`)."""
 
     name = "streamed"
 
@@ -400,13 +402,13 @@ class StreamedRoundEngine:
     def begin_round(self, stacked_deltas: Pytree,
                     stacked_grads: Pytree) -> "StreamedRoundContext":
         if self.mesh is not None:
-            from ..sharding.specs import stream_column_shardings
+            from ..sharding.specs import stream_round_shardings
             stacked_deltas = jax.device_put(
                 stacked_deltas,
-                stream_column_shardings(self.mesh, stacked_deltas))
+                stream_round_shardings(self.mesh, stacked_deltas))
             stacked_grads = jax.device_put(
                 stacked_grads,
-                stream_column_shardings(self.mesh, stacked_grads))
+                stream_round_shardings(self.mesh, stacked_grads))
         dview = ChunkedFlatView(stacked_deltas, self.gram_scope)
         gview = ChunkedFlatView(stacked_grads, self.gram_scope)
         P = dview.K

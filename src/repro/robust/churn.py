@@ -52,6 +52,14 @@ def _wave_members(wave: ChurnWave, num_devices: int) -> FrozenSet[int]:
     return frozenset(int(i) for i in rng.choice(num_devices, m, replace=False))
 
 
+@lru_cache(maxsize=256)
+def _wave_member_mask(wave: ChurnWave, num_devices: int) -> np.ndarray:
+    """Boolean lookup of :func:`_wave_members` (vectorized membership)."""
+    mask = np.zeros(num_devices, bool)
+    mask[list(_wave_members(wave, num_devices))] = True
+    return mask
+
+
 @dataclass(frozen=True)
 class ChurnSchedule:
     """Hashable stack of waves over a fleet of ``num_devices``.  The duck
@@ -62,6 +70,22 @@ class ChurnSchedule:
     def offline(self, device_id: int, t: float) -> bool:
         return any(w.active(t) and device_id in _wave_members(
             w, self.num_devices) for w in self.waves)
+
+    def offline_mask(self, device_ids: np.ndarray,
+                     times: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`offline` over parallel (device, dispatch-time)
+        arrays — the batch-dispatch path asks one question per cohort instead
+        of one per device.  Same membership draws, same answer element-wise
+        (tested against the scalar path)."""
+        ids = np.asarray(device_ids, np.int64)
+        ts = np.asarray(times, np.float64)
+        out = np.zeros(ids.shape, bool)
+        for w in self.waves:
+            active = (ts >= w.start) & (ts < w.end)
+            if not active.any():
+                continue
+            out |= active & _wave_member_mask(w, self.num_devices)[ids]
+        return out
 
     def members(self, wave_idx: int) -> FrozenSet[int]:
         return _wave_members(self.waves[wave_idx], self.num_devices)

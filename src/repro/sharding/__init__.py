@@ -1,3 +1,7 @@
-from .specs import (batch_pspec, cache_pspecs, param_pspecs, spec_for_leaf)
+from .specs import (batch_pspec, cache_pspecs, fleet_mesh, param_pspecs,
+                    shard_cohort_fn, spec_for_leaf, stream_column_shardings,
+                    stream_round_shardings)
 
-__all__ = ["batch_pspec", "cache_pspecs", "param_pspecs", "spec_for_leaf"]
+__all__ = ["batch_pspec", "cache_pspecs", "fleet_mesh", "param_pspecs",
+           "shard_cohort_fn", "spec_for_leaf", "stream_column_shardings",
+           "stream_round_shardings"]

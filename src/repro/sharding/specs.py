@@ -179,6 +179,71 @@ def stream_column_shardings(mesh: Mesh, stacked: Pytree) -> Pytree:
     return jax.tree_util.tree_map(leaf_sharding, stacked)
 
 
+def fleet_mesh(devices=None) -> Mesh:
+    """One-axis 'fleet' mesh over the host's accelerators — the device-axis
+    sharding entry point for fleet-scale cohorts (compose it with
+    'data'/'model' axes by building the Mesh yourself)."""
+    devices = jax.devices() if devices is None else devices
+    return Mesh(np.asarray(devices), ("fleet",))
+
+
+def stream_round_shardings(mesh: Mesh, stacked: Pytree) -> Pytree:
+    """:func:`stream_column_shardings` plus a leading device-axis partition:
+    with a ``'fleet'`` mesh axis the leading P (device) dim of every leaf
+    shards over it — each mesh device holds its own row block of the round
+    matrices, so the streamed engine's (P, n) statistics pass runs
+    row-parallel — composing with the chunk-axis column sharding over the
+    remaining axes.  Without a ``'fleet'`` axis this is exactly
+    :func:`stream_column_shardings` (back-compat for existing meshes)."""
+    if "fleet" not in mesh.shape:
+        return stream_column_shardings(mesh, stacked)
+    col_axes = [a for a in ("pod", "data", "model") if a in mesh.shape]
+    col = tuple(col_axes) if len(col_axes) > 1 else \
+        (col_axes[0] if col_axes else None)
+
+    def leaf_sharding(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        if len(shape) == 1:
+            return NamedSharding(mesh, _guard(("fleet",), shape, mesh))
+        spec = ("fleet",) + (None,) * (len(shape) - 2) + (col,)
+        return NamedSharding(mesh, _guard(spec, shape, mesh))
+
+    return jax.tree_util.tree_map(leaf_sharding, stacked)
+
+
+def shard_cohort_fn(mesh: Mesh, cohort_fn, num_stacked_args: int):
+    """``shard_map`` a cohort function ``(params, *stacked_args) -> pytree``
+    over the ``'fleet'`` axis: params replicated, every stacked argument and
+    every output leaf partitioned on its leading cohort axis — each mesh
+    device trains its own block of the cohort.  Cohorts that don't divide
+    the axis are padded (first row repeated) and sliced back, so any P
+    works.  Returns a jitted callable."""
+    from jax.experimental.shard_map import shard_map
+    import jax.numpy as jnp
+
+    axis = mesh.shape["fleet"]
+    inner = shard_map(
+        cohort_fn, mesh=mesh,
+        in_specs=(P(),) + (P("fleet"),) * num_stacked_args,
+        out_specs=P("fleet"), check_rep=False)
+
+    @jax.jit
+    def wrapped(params, *args):
+        B = args[0].shape[0]
+        pad = (-B) % axis
+        if pad:
+            args = tuple(jnp.concatenate(
+                [a, jnp.repeat(a[:1], pad, axis=0)]) for a in args)
+        out = inner(params, *args)
+        if pad:
+            out = jax.tree_util.tree_map(lambda a: a[:B], out)
+        return out
+
+    return wrapped
+
+
 def named(mesh: Mesh, tree_of_specs: Pytree) -> Pytree:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), tree_of_specs,
