@@ -42,7 +42,13 @@ IGNORE = ("round_time_s", "wall_time", "us_per_call", "time_end",
           "selected", "candidates_timed", "ungated",
           # fleet throughput / host-memory columns (machine-dependent);
           # listed before the "devices" EXACT match below on purpose
-          "devices_per_s", "peak_rss")
+          "devices_per_s", "peak_rss",
+          # serving wall-clock columns: raw tokens/s, the loop-vs-engine
+          # speedup ratio, and publish→adopt swap stalls all move with the
+          # machine; the gated serving facts are the meets_* booleans
+          # (note "tok_per_s" does NOT catch the deterministic
+          # virtual-clock column "tokens_per_virtual_s")
+          "tok_per_s", "speedup", "stall")
 EXACT = ("bytes", "savings", "gateways", "devices", "rounds", "num_",
          "meets_")
 LOOSE_REL = 0.35        # losses / accs / virtual times across jax versions

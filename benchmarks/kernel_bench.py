@@ -124,6 +124,29 @@ def collect(quick: bool = False) -> Dict[str, List[dict]]:
             "oracle_max_abs_err": _err(out[0], ref.topk_ref(v, k)[0]),
         })
 
+    # serving decode attention: one token per slot vs a long KV cache with
+    # per-slot lengths masking (the DecodeEngine hot path, PR-10)
+    ds = ((4, 128),) if quick else ((4, 128), (8, 256))
+    for B, S in ds:
+        KV, G, hd = 4, 2, 64
+        kq = jax.random.fold_in(key, 5)
+        q = jax.random.normal(kq, (B, KV, G, hd), jnp.float32)
+        kc = jax.random.normal(jax.random.fold_in(kq, 1), (B, S, KV, hd),
+                               jnp.float32)
+        vc = jax.random.normal(jax.random.fold_in(kq, 2), (B, S, KV, hd),
+                               jnp.float32)
+        lengths = jnp.arange(1, B + 1, dtype=jnp.int32) * (S // (B + 1))
+        out, us = _timed(lambda: ops.flash_decode(q, kc, vc, lengths))
+        records.append({
+            "op": "flash_decode", "shape": f"B{B}_S{S}_h{KV}x{G}_d{hd}",
+            "n": S,
+            "bytes_touched": (2 * B * S * KV * hd + B * KV * G * hd) * 4,
+            "num_backends": len(ops.backends("flash_decode")),
+            "us_per_call_dispatch": us,
+            "oracle_max_abs_err": _pair_err(
+                out, ref.flash_decode_ref(q, kc, vc, lengths)),
+        })
+
     # the raw autotune cache rides alongside the per-shape records: the
     # per-backend timings + selections per (op, shape-bucket), all
     # machine-dependent and gate-ignored

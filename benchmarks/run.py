@@ -33,7 +33,8 @@ def _registry():
     from . import (async_vs_sync, bigmodel_round, compress_sweep,
                    fig2_3_k2_variants, fig4_5_algorithms,
                    fig6_rounds_to_accuracy, fig7_alpha_stages, fleet_scale,
-                   hier_vs_flat, kernel_bench, robust_suite, roofline_report)
+                   hier_vs_flat, kernel_bench, robust_suite, roofline_report,
+                   serve_bench)
     return {
         "fig2_3": (fig2_3_k2_variants,
                    lambda q: dict(rounds=10 if q else 25), False),
@@ -54,6 +55,7 @@ def _registry():
                      lambda q: dict(rounds=8 if q else 16), True),
         "robust": (robust_suite,
                    lambda q: dict(rounds=10 if q else 20), True),
+        "serve": (serve_bench, lambda q: dict(quick=q), True),
         "kernels": (kernel_bench, lambda q: dict(quick=q), True),
         "roofline": (roofline_report, lambda q: {}, False),
     }

@@ -46,7 +46,14 @@ METRIC_COLS = ("final_loss", "final_train_loss", "devices_per_round",
                "peak_round_matrix_bytes", "dense_round_matrix_bytes",
                "uplink_savings", "peak_savings_vs_dense", "savings",
                "meets_mem_target", "t_virtual_end",
-               "steady_wall_time_per_round_s", "compile_wall_time_s")
+               "steady_wall_time_per_round_s", "compile_wall_time_s",
+               # serving columns (PR-10): loop-vs-engine throughput, swap
+               # stalls, occupancy, and model staleness under hot-swaps
+               "seed_tok_per_s", "engine_tok_per_s", "speedup_vs_loop",
+               "meets_speedup_5x", "tokens_per_virtual_s",
+               "swap_stall_s_max", "num_swaps", "slot_occupancy_mean",
+               "staleness_virtual_mean_s", "served_loss_mean",
+               "loss_match_max_abs_err", "meets_loss_match")
 MAX_COLS = 9
 TOP_SPANS = 10
 

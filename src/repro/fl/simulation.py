@@ -488,8 +488,9 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                         scheduler_mode: str = "auto",
                         rng_stream: str = "v1",
                         eval_device_cap: int = 4096,
-                        cohort_chunk: Optional[int] = None
-                        ) -> HierSimulationResult:
+                        cohort_chunk: Optional[int] = None,
+                        publish_fn: Optional[Callable[[int, Pytree], None]]
+                        = None) -> HierSimulationResult:
     """Synchronous rounds over a multi-tier topology (``cfg`` is a
     :class:`repro.hier.HierConfig`, ``topology`` a :class:`repro.hier.Topology`).
 
@@ -541,6 +542,14 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
     sequential draws, ``"v2"`` counter-based — see
     :class:`repro.edge.EventScheduler`); both are deterministic, v2 is the
     one whose batch dispatch vectorizes.
+
+    ``publish_fn(round, params)``, when given, is called with each round's
+    aggregated params the moment the cloud stage applies them (inside the
+    round's virtual-clock scope, so ``spans.virtual_now()`` is the round's
+    completion time) — the train→serve hook that feeds
+    :class:`repro.serve.ModelBus.publish` without the serving side polling
+    the result object.  Skipped rounds (every participant dropped) publish
+    nothing.
     """
     # Imported lazily: repro.hier imports repro.edge which imports repro.fl,
     # so the reverse edge must not exist at import time.
@@ -983,6 +992,11 @@ def run_hier_simulation(name: str, loss_fn: Callable, apply_fn: Callable,
                         with spans.span("cloud"):
                             delta, round_info = _cloud_stage(payload)
                             params = ctx.apply(params, delta)
+                        if publish_fn is not None:
+                            # train→serve hop: hand the round's aggregated
+                            # params to the serving side (e.g. ModelBus)
+                            # the moment the cloud stage lands them
+                            publish_fn(t, params)
                     cloud_done = True
 
                 def _cloud_stage(payload):

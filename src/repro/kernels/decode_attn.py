@@ -25,7 +25,7 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
-                   m_scr, l_scr, acc_scr, *, block_s: int, window):
+                   m_scr, l_scr, acc_scr, *, block_s: int, window, softcap):
     s_idx = pl.program_id(2)
 
     @pl.when(s_idx == 0)
@@ -42,6 +42,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
     scale = q.shape[-1] ** -0.5
     s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, bs)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
     kpos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     ok = kpos < length
     if window is not None:
@@ -65,14 +67,18 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_s", "window", "interpret"))
+                   static_argnames=("block_s", "window", "softcap",
+                                    "interpret"))
 def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                         lengths: jax.Array, *, block_s: int = 512,
-                        window: int | None = None, interpret: bool = True):
+                        window: int | None = None,
+                        softcap: float | None = None,
+                        interpret: bool = True):
     """q (B, KV, G, hd); k, v (B, S, KV, hd); lengths (B,) int32 (= pos+1).
 
     Returns ``(o (B, KV, G, hd) f32, lse (B, KV, G, 1) f32)`` — partials
-    suitable for LSE-merge across seq shards.
+    suitable for LSE-merge across seq shards.  ``softcap`` applies the tanh
+    logit cap before masking (gemma-family serving).
     """
     B, S, KV, hd = k.shape
     G = q.shape[2]
@@ -84,7 +90,8 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     lengths2d = lengths.reshape(B, 1).astype(jnp.int32)
 
     grid = (B, KV, Sp // block_s)
-    kernel = functools.partial(_decode_kernel, block_s=block_s, window=window)
+    kernel = functools.partial(_decode_kernel, block_s=block_s, window=window,
+                               softcap=softcap)
     o, lse = pl.pallas_call(
         kernel,
         grid=grid,

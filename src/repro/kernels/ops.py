@@ -273,17 +273,41 @@ def sign_sketch_adjoint(coords: jax.Array, seed, n: int, *,
 
 # ------------------------------------------------------------ decode attn
 
+register_impl("flash_decode", "pallas",
+              lambda q, k, v, lengths, window=None, softcap=None,
+              block_s=512: flash_decode_pallas(
+                  q, k, v, lengths, block_s=block_s, window=window,
+                  softcap=softcap, interpret=not on_tpu()),
+              eligible=_not_interpret)
+_flash_decode_xla_jit = jax.jit(ref.flash_decode_ref,
+                                static_argnames=("window", "softcap"))
+register_impl("flash_decode", "xla",
+              lambda q, k, v, lengths, window=None, softcap=None,
+              block_s=512: _flash_decode_xla_jit(
+                  q, k, v, lengths, window=window, softcap=softcap))
+register_impl("flash_decode", "ref",
+              lambda q, k, v, lengths, window=None, softcap=None,
+              block_s=512: ref.flash_decode_ref(
+                  q, k, v, lengths, window=window, softcap=softcap))
+
+
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  lengths: jax.Array, *, window: Optional[int] = None,
-                 block_s: int = 512, use_pallas: Optional[bool] = None
+                 softcap: Optional[float] = None, block_s: int = 512,
+                 use_pallas: Optional[bool] = None,
+                 backend: Optional[str] = None
                  ) -> Tuple[jax.Array, jax.Array]:
     """Single-token attention vs a long cache; returns (o, lse) partials.
-    (Serving-path op — not part of the aggregation registry.)"""
-    use_pallas = on_tpu() if use_pallas is None else use_pallas
-    if use_pallas:
-        return flash_decode_pallas(q, k, v, lengths, block_s=block_s,
-                                   window=window, interpret=not on_tpu())
-    return ref.flash_decode_ref(q, k, v, lengths, window=window)
+
+    The serving hot path (``repro.serve.DecodeEngine`` calls this per layer
+    per step): q (B, KV, G, hd) against k/v (B, S, KV, hd) with per-slot
+    ``lengths`` (B,) masking — exactly the continuous-batching contract.
+    Dispatched through the autotune registry like the aggregation ops; the
+    former manual interpret-mode branch (pallas on TPU, eager ref elsewhere
+    — the eager oracle on every off-TPU decode step) is gone."""
+    return dispatch("flash_decode", q, k, v, lengths, window=window,
+                    softcap=softcap, block_s=block_s,
+                    backend=_backend_for(use_pallas, backend))
 
 
 def lse_merge(o_parts: jax.Array, lse_parts: jax.Array):

@@ -50,14 +50,19 @@ def combine_ref(params_vec: jax.Array, updates: jax.Array,
 
 
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
-                     lengths: jax.Array, window: int | None = None):
+                     lengths: jax.Array, window: int | None = None,
+                     softcap: float | None = None):
     """(o, lse) — oracle for kernels.decode_attn.
 
-    q (B, KV, G, hd); k, v (B, S, KV, hd); lengths (B,)."""
+    q (B, KV, G, hd); k, v (B, S, KV, hd); lengths (B,).  ``softcap`` applies
+    the tanh logit cap (gemma-style) before masking, matching
+    ``models.layers.softcap``."""
     B, S, KV, hd = k.shape
     scale = hd ** -0.5
     q32 = q.astype(jnp.float32) * scale
     s = jnp.einsum("bkgd,bskd->bkgs", q32, k.astype(jnp.float32))
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
     kpos = jnp.arange(S)[None, None, None, :]
     ok = kpos < lengths[:, None, None, None]
     if window is not None:

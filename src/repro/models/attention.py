@@ -256,6 +256,42 @@ def attention_decode(cfg: ArchConfig, params: Dict, x: jax.Array,
     return out, KVCache(k, v)
 
 
+def attention_decode_slots(cfg: ArchConfig, params: Dict, x: jax.Array,
+                           cache: KVCache, positions: jax.Array, *,
+                           window: Optional[int] = None,
+                           use_rope: bool = True
+                           ) -> Tuple[jax.Array, KVCache]:
+    """Continuous-batching decode: one token per slot at per-slot positions.
+
+    x: (B, 1, d); positions: (B,) int32, each slot's current index (its row
+    count so far).  Unlike :func:`attention_decode` the batch rows are
+    independent requests at different depths, so the new K/V row is
+    scattered per slot and the contraction runs through the registry's
+    ``flash_decode`` op, whose per-batch ``lengths`` masking is exactly the
+    per-slot contract (window masking included; no ring mode — the serve
+    cache is allocated at full ``max_seq``).  Rows at index ≥ a slot's
+    length may hold garbage from retired requests or padded prefill chunks;
+    they are never attended and are overwritten before becoming visible
+    (the engine writes row ``p`` exactly when a slot's position reaches
+    ``p``)."""
+    from ..kernels import ops as kops    # deferred: models must import light
+    B = x.shape[0]
+    pos_arr = positions[:, None]                       # (B, 1) for RoPE
+    q, k_new, v_new = _project_qkv(cfg, params, x,
+                                   pos_arr if use_rope else None, use_rope)
+    b_idx = jnp.arange(B)
+    k = cache.k.at[b_idx, positions].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[b_idx, positions].set(v_new[:, 0].astype(cache.v.dtype))
+
+    hd = cfg.resolved_head_dim
+    KV = cfg.num_kv_heads
+    G = cfg.num_heads // KV
+    o, _ = kops.flash_decode(q.reshape(B, KV, G, hd), k, v, positions + 1,
+                             window=window, softcap=cfg.attn_logit_softcap)
+    out = o.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype) @ params["wo"]
+    return out, KVCache(k, v)
+
+
 def ring_place(k_stack: jax.Array, capacity: int) -> jax.Array:
     """Place prompt K/V rows (…, S, KV, hd) into a ring cache of ``capacity``
     slots: the last ``capacity`` rows land at their position-mod-W slots."""

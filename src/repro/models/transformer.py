@@ -18,8 +18,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .attention import (KVCache, attention_decode, attention_forward,
-                        init_attention, init_kv_cache)
+from .attention import (KVCache, _project_qkv, attention_decode,
+                        attention_decode_slots, attention_forward,
+                        flash_attention, init_attention, init_kv_cache,
+                        naive_attention)
 from .config import ArchConfig
 from .layers import dtype_of, embed_init, rms_norm
 from .mlp import init_mlp, mlp_forward
@@ -224,9 +226,14 @@ def cache_capacity(cfg: ArchConfig, max_seq: int) -> int:
     return max_seq
 
 
-def init_lm_cache(cfg: ArchConfig, batch: int, max_seq: int) -> LMCache:
+def init_lm_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                  ring: bool = True) -> LMCache:
+    """``ring=False`` allocates the full ``max_seq`` capacity even for
+    window-bounded archs — the serve engine's layout, where per-slot
+    absolute positions index rows directly and the window is enforced by
+    ``flash_decode`` masking instead of ring placement."""
     dtype = dtype_of(cfg.dtype)
-    cap = cache_capacity(cfg, max_seq)
+    cap = cache_capacity(cfg, max_seq) if ring else max_seq
     stack = lambda tree, n: jax.tree_util.tree_map(
         lambda z: jnp.broadcast_to(z, (n,) + z.shape), tree)
     kv = ssm = shared = None
@@ -377,6 +384,99 @@ def decode_step(cfg: ArchConfig, params: Pytree, token: jax.Array,
                                    position=pos + 1)
     logits = _logits(cfg, params, x)
     return logits[:, 0], new_cache
+
+
+def decode_slots(cfg: ArchConfig, params: Pytree, token: jax.Array,
+                 cache: LMCache, positions: jax.Array,
+                 window: Optional[int] = None
+                 ) -> Tuple[jax.Array, LMCache]:
+    """Continuous-batching decode step: token (B,), positions (B,) int32 —
+    each batch row is an independent request at its own depth (the serve
+    engine's per-slot contract).  KV-cache families only (dense/moe/vlm
+    text decode); ``cache.position`` is ignored — the engine owns per-slot
+    positions.  Returns (logits (B, V), updated cache)."""
+    if cache.kv is None:
+        raise ValueError("decode_slots needs a KV-cache family "
+                         f"(dense/moe/vlm), got {cfg.family!r}")
+    window = window if window is not None else cfg.sliding_window
+
+    x = params["embed"][token][:, None, :]     # (B,1,d)
+
+    def body(h, inp):
+        layer_p, ck, cv = inp
+        a = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
+        attn, new_kv = attention_decode_slots(cfg, layer_p["attn"], a,
+                                              KVCache(ck, cv), positions,
+                                              window=window)
+        h = h + attn
+        m = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+        if "moe" in layer_p:
+            ff, _ = moe_forward(cfg, layer_p["moe"], m)
+        else:
+            ff = mlp_forward(cfg, layer_p["mlp"], m)
+        return h + ff, new_kv
+
+    x, new_kv = lax.scan(body, x, (params["blocks"], cache.kv.k, cache.kv.v))
+    new_cache = cache._replace(kv=KVCache(new_kv.k, new_kv.v))
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], new_cache
+
+
+def prefill_chunk(cfg: ArchConfig, params: Pytree, tokens: jax.Array,
+                  cache: LMCache, slot: jax.Array, start: jax.Array,
+                  window: Optional[int] = None
+                  ) -> Tuple[jax.Array, LMCache]:
+    """One chunk of an incremental single-request prefill into ``slot``.
+
+    tokens (C,) int32 occupy absolute positions [start, start+C) of the
+    slot's row space; K/V rows are written into the engine cache (allocated
+    ``ring=False``) and the chunk's queries attend to the slot's whole row
+    space under a causal/window mask — rows at positions ≥ start+C are
+    unwritten (or retired-request garbage) but carry k-positions above every
+    query position, so the causal mask excludes them.  Long prompts are fed
+    as successive chunks, so resident decode slots never stall behind one
+    monolithic prompt.  Returns (logits (C, V), cache)."""
+    if cache.kv is None:
+        raise ValueError("prefill_chunk needs a KV-cache family "
+                         f"(dense/moe), got {cfg.family!r}")
+    window = window if window is not None else cfg.sliding_window
+    C = tokens.shape[0]
+    S = cache.kv.k.shape[2]
+    positions = start + jnp.arange(C)
+    x = params["embed"][tokens][None]          # (1, C, d)
+    mode = "window" if window is not None else "causal"
+
+    def body(h, inp):
+        layer_p, ck, cv = inp                  # ck/cv (B, S, KV, hd)
+        a = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
+        q, k_new, v_new = _project_qkv(cfg, layer_p["attn"], a,
+                                       positions[None])
+        ck = lax.dynamic_update_slice(ck, k_new.astype(ck.dtype),
+                                      (slot, start, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v_new.astype(cv.dtype),
+                                      (slot, start, 0, 0))
+        ks = lax.dynamic_slice(ck, (slot, 0, 0, 0), (1,) + ck.shape[1:])
+        vs = lax.dynamic_slice(cv, (slot, 0, 0, 0), (1,) + cv.shape[1:])
+        kwargs = dict(q_positions=positions, k_positions=jnp.arange(S),
+                      mode=mode, window=window,
+                      logit_softcap=cfg.attn_logit_softcap)
+        if S <= 1024:
+            o = naive_attention(q, ks, vs, **kwargs)
+        else:
+            o = flash_attention(q, ks, vs, **kwargs)
+        h = h + o.reshape(1, C, -1) @ layer_p["attn"]["wo"]
+        m = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+        if "moe" in layer_p:
+            ff, _ = moe_forward(cfg, layer_p["moe"], m)
+        else:
+            ff = mlp_forward(cfg, layer_p["mlp"], m)
+        return h + ff, (ck, cv)
+
+    x, (k_all, v_all) = lax.scan(body, x, (params["blocks"], cache.kv.k,
+                                           cache.kv.v))
+    new_cache = cache._replace(kv=KVCache(k_all, v_all))
+    logits = _logits(cfg, params, x)
+    return logits[0], new_cache
 
 
 def _hybrid_decode(cfg, params, x, cache: LMCache, window):

@@ -73,9 +73,58 @@ def test_every_backend_matches_ref(op):
 
 def test_every_op_has_all_three_backends():
     for op in ("gram", "gram_block", "sketch", "topk", "combine",
-               "sign_sketch"):
+               "sign_sketch", "flash_decode"):
         assert {"pallas", "xla", "ref"} <= set(ops.backends(op)), op
     assert {"xla", "ref"} <= set(ops.backends("sign_sketch_adjoint"))
+
+
+# ------------------------------------------------------- decode attention
+
+def _attn_data(B=3, S=64, KV=2, G=2, hd=16, seed=2):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (B, KV, G, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd),
+                         jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd),
+                          jnp.float32)
+    lengths = jnp.asarray([1, S // 2, S], jnp.int32)
+    return q, k, v, lengths
+
+
+def test_flash_decode_every_backend_matches_ref():
+    """The serving hot path rides the registry like the aggregation ops
+    (PR-10 satellite): all three backends agree, including masked tails,
+    sliding window, and logit softcap."""
+    q, k, v, lengths = _attn_data()
+    want = ref.flash_decode_ref(q, k, v, lengths)
+    want_w = ref.flash_decode_ref(q, k, v, lengths, window=16, softcap=5.0)
+    for be in ops.backends("flash_decode"):
+        _allclose(ops.flash_decode(q, k, v, lengths, backend=be), want)
+        _allclose(ops.flash_decode(q, k, v, lengths, window=16,
+                                   softcap=5.0, backend=be), want_w)
+
+
+def test_flash_decode_autotune_streams_registry_event():
+    from repro.obs import InMemoryTracker, use_tracker
+
+    registry.clear_autotune_cache()
+    q, k, v, lengths = _attn_data()
+    mem = InMemoryTracker()
+    with use_tracker(mem):
+        ops.flash_decode(q, k, v, lengths)
+        ops.flash_decode(q, k, v, lengths)        # same bucket: cached
+    picks = [e.metrics for e in mem.metrics_events()
+             if "kernels/autotune/op" in e.metrics]
+    assert len(picks) == 1
+    assert picks[0]["kernels/autotune/op"] == "flash_decode"
+    assert picks[0]["kernels/autotune/backend"] in \
+        ops.backends("flash_decode")
+    rec = next(r for r in registry.autotune_records()
+               if r["op"] == "flash_decode")
+    assert rec["num_backends"] == 3
+    if not ops.on_tpu():
+        # interpret-mode pallas must never be timed as a candidate
+        assert "us_per_call_pallas" not in rec
 
 
 def test_backend_equiv_property_sweep():
