@@ -45,10 +45,12 @@ IGNORE = ("round_time_s", "wall_time", "us_per_call", "time_end",
           "devices_per_s", "peak_rss",
           # serving wall-clock columns: raw tokens/s, the loop-vs-engine
           # speedup ratio, and publish→adopt swap stalls all move with the
-          # machine; the gated serving facts are the meets_* booleans
-          # (note "tok_per_s" does NOT catch the deterministic
-          # virtual-clock column "tokens_per_virtual_s")
-          "tok_per_s", "speedup", "stall")
+          # machine; the gated serving facts are the meets_* booleans,
+          # which _classify checks BEFORE this list so no ignore substring
+          # can swallow an acceptance flag (note "tok_per_s" does NOT catch
+          # the deterministic virtual-clock column "tokens_per_virtual_s",
+          # and "speedup_vs_loop" does NOT catch the min_speedup_x config)
+          "tok_per_s", "speedup_vs_loop", "stall")
 EXACT = ("bytes", "savings", "gateways", "devices", "rounds", "num_",
          "meets_")
 LOOSE_REL = 0.35        # losses / accs / virtual times across jax versions
@@ -61,6 +63,11 @@ IDENTITY_NUM = ("ratio", "u_frac", "depth", "gateways", "fleet_slowdown",
 
 
 def _classify(key: str):
+    # acceptance booleans are THE gated facts — classify them ahead of the
+    # IGNORE substrings so e.g. "stall"/"speedup_vs_loop" can never swallow
+    # a meets_* flag
+    if key.startswith("meets_"):
+        return EXACT_REL, 0.0
     for pat in IGNORE:
         if pat in key:
             return None

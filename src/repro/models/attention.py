@@ -259,12 +259,14 @@ def attention_decode(cfg: ArchConfig, params: Dict, x: jax.Array,
 def attention_decode_slots(cfg: ArchConfig, params: Dict, x: jax.Array,
                            cache: KVCache, positions: jax.Array, *,
                            window: Optional[int] = None,
-                           use_rope: bool = True
+                           use_rope: bool = True,
+                           active: Optional[jax.Array] = None
                            ) -> Tuple[jax.Array, KVCache]:
     """Continuous-batching decode: one token per slot at per-slot positions.
 
     x: (B, 1, d); positions: (B,) int32, each slot's current index (its row
-    count so far).  Unlike :func:`attention_decode` the batch rows are
+    count so far); active: (B,) bool, which slots hold a live decoding
+    request.  Unlike :func:`attention_decode` the batch rows are
     independent requests at different depths, so the new K/V row is
     scattered per slot and the contraction runs through the registry's
     ``flash_decode`` op, whose per-batch ``lengths`` masking is exactly the
@@ -273,15 +275,23 @@ def attention_decode_slots(cfg: ArchConfig, params: Dict, x: jax.Array,
     length may hold garbage from retired requests or padded prefill chunks;
     they are never attended and are overwritten before becoming visible
     (the engine writes row ``p`` exactly when a slot's position reaches
-    ``p``)."""
+    ``p``).  Inactive slots must not write at all — their ``positions`` may
+    be stale (a retired request's stop index, or 0 for a fresh slot) and a
+    scatter there would corrupt rows another request is concurrently
+    chunk-prefilling into the slot — so their writes are routed to the
+    out-of-bounds row ``S`` and dropped."""
     from ..kernels import ops as kops    # deferred: models must import light
     B = x.shape[0]
     pos_arr = positions[:, None]                       # (B, 1) for RoPE
     q, k_new, v_new = _project_qkv(cfg, params, x,
                                    pos_arr if use_rope else None, use_rope)
     b_idx = jnp.arange(B)
-    k = cache.k.at[b_idx, positions].set(k_new[:, 0].astype(cache.k.dtype))
-    v = cache.v.at[b_idx, positions].set(v_new[:, 0].astype(cache.v.dtype))
+    S = cache.k.shape[1]
+    write_at = positions if active is None else jnp.where(active, positions, S)
+    k = cache.k.at[b_idx, write_at].set(k_new[:, 0].astype(cache.k.dtype),
+                                        mode="drop")
+    v = cache.v.at[b_idx, write_at].set(v_new[:, 0].astype(cache.v.dtype),
+                                        mode="drop")
 
     hd = cfg.resolved_head_dim
     KV = cfg.num_kv_heads

@@ -388,13 +388,17 @@ def decode_step(cfg: ArchConfig, params: Pytree, token: jax.Array,
 
 def decode_slots(cfg: ArchConfig, params: Pytree, token: jax.Array,
                  cache: LMCache, positions: jax.Array,
-                 window: Optional[int] = None
+                 window: Optional[int] = None,
+                 active: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, LMCache]:
     """Continuous-batching decode step: token (B,), positions (B,) int32 —
     each batch row is an independent request at its own depth (the serve
     engine's per-slot contract).  KV-cache families only (dense/moe/vlm
     text decode); ``cache.position`` is ignored — the engine owns per-slot
-    positions.  Returns (logits (B, V), updated cache)."""
+    positions.  ``active`` (B,) bool marks slots holding a live request;
+    inactive slots' K/V writes are dropped (their positions may be stale
+    and the row can belong to a request being chunk-prefilled into the
+    slot).  Returns (logits (B, V), updated cache)."""
     if cache.kv is None:
         raise ValueError("decode_slots needs a KV-cache family "
                          f"(dense/moe/vlm), got {cfg.family!r}")
@@ -407,7 +411,7 @@ def decode_slots(cfg: ArchConfig, params: Pytree, token: jax.Array,
         a = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
         attn, new_kv = attention_decode_slots(cfg, layer_p["attn"], a,
                                               KVCache(ck, cv), positions,
-                                              window=window)
+                                              window=window, active=active)
         h = h + attn
         m = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
         if "moe" in layer_p:

@@ -15,6 +15,10 @@ more than one chunk.  Rows of a slot at index ≥ its length may hold
 retired-request or padded-prefill garbage; they are never attended because
 ``flash_decode`` masks ``kpos < length`` and decode writes row ``p``
 exactly when the slot's position reaches ``p`` (write-before-read).
+Inactive slots (``pos >= stop_at`` — retired, fresh, or mid-chunked-
+prefill) write nothing: ``decode_slots`` drops their K/V scatter, so a
+slot's stale device position can never clobber rows a new request is
+being chunk-prefilled into while other slots decode.
 
 Model hot-swap: the engine re-snapshots its :class:`~repro.serve.bus.ModelBus`
 at every step boundary.  An in-flight scan chunk runs entirely on one
@@ -160,7 +164,7 @@ class DecodeEngine:
                 cache, tok, pos, key = carry
                 active = pos < stop_at
                 logits, cache = decode_slots(cfg, params, tok, cache, pos,
-                                             window=window)
+                                             window=window, active=active)
                 key, sub = jax.random.split(key)
                 if greedy:
                     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)

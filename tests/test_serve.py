@@ -66,6 +66,41 @@ def test_continuous_batching_bit_identical_to_solo_decode(params):
         assert c.tokens == batched[rid], f"rid={rid} diverged"
 
 
+def test_multichunk_prefill_into_reused_slot_while_decoding(params):
+    """A prompt longer than ``prefill_chunk_tokens`` chunk-prefilled into a
+    *reused* slot, while another slot decodes, must produce the same tokens
+    as serving it alone.  Regression: inactive slots carry stale device
+    positions (a retired request's stop index, or 0 for fresh slots) and an
+    unmasked decode scatter would rewrite an already-prefilled row with
+    garbage K/V that later chunks and every decode step then attend."""
+    pA, pB, pD = _prompts(3, plen=4, seed=11)
+    pC = _prompts(1, plen=12, seed=13)[0]        # 12 > chunk 4 → 3 chunks
+
+    eng = DecodeEngine(CFG, ModelBus(params), num_slots=2, max_seq=32,
+                       scan_chunk=2, prefill_chunk_tokens=4)
+    # rA/rB admit and retire in one step, leaving both slots free with
+    # stale device positions at their stop indices
+    eng.submit(pA, 1, rid=0)
+    eng.submit(pB, 1, rid=1)
+    done = eng.step()
+    # rD reuses slot 0 and keeps decoding across rC's whole prefill
+    eng.submit(pD, 20, rid=2)
+    done += eng.step()
+    # rC's 3-chunk prefill reuses slot 1 (stale position 4) while rD decodes
+    eng.submit(pC, 4, rid=3)
+    done += eng.run()
+    batched = {c.rid: c.tokens for c in done}
+    assert sorted(batched) == [0, 1, 2, 3]
+
+    for rid, (prompt, max_new) in enumerate([(pA, 1), (pB, 1), (pD, 20),
+                                             (pC, 4)]):
+        solo = DecodeEngine(CFG, ModelBus(params), num_slots=2, max_seq=32,
+                            scan_chunk=2, prefill_chunk_tokens=4)
+        solo.submit(prompt, max_new, rid=rid)
+        (c,) = solo.run()
+        assert c.tokens == batched[rid], f"rid={rid} diverged"
+
+
 def test_chunked_prefill_matches_wide_prefill_first_token(params):
     """Feeding a prompt in small chunks samples the same first token as
     one chunk covering the whole prompt."""
